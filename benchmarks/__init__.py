@@ -1,0 +1,9 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  table2  — forward/backward quantizer metrics (MSE, PMA) — exact repro
+  table3  — fully-quantized training method comparison (scaled-down)
+  fig1    — scaling-law fit + FP4/FP8 optimality regions
+  fig3    — linear-layer speedup model (roofline-derived) + kernel timings
+  table7  — PTQ (QuaRot-style) vs native Quartet training
+  roofline — per-(arch × shape × mesh) three-term roofline from the dry-run
+"""

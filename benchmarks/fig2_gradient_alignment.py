@@ -1,0 +1,122 @@
+"""Figure 2 reproduction: backward quantization vs gradient quality.
+
+(a) cosine similarity and (b) magnitude alignment (the PMA quantity) of
+inter-layer activation gradients as a function of back-propagation depth,
+for RTN vs SR backward quantization, against the unquantized-backward
+reference — on a small Llama stack, exactly the paper's probe.
+(c) the training-dynamics consequence: RTN-backward is competitive early,
+SR-backward wins as the token budget grows (the paper's D/N inflection).
+
+Paper's qualitative claims under test: RTN keeps higher cosine similarity;
+SR keeps magnitude alignment ≈ 1 (unbiased); with depth both effects
+compound; longer training favors SR.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.llama_paper import tiny_llama
+from repro.core.quartet import QuartetConfig
+from repro.data.pipeline import SyntheticC4Dataset, TokenBatcher
+from repro.models import build_model
+from repro.models.transformer import dense_block, init_dense_block
+from repro.optim import adamw, cosine_warmup
+from repro.train.loop import train
+
+DEPTH = 6
+
+
+def _per_depth_alignment():
+    """Inter-layer activation gradients for all depths in ONE backward per
+    scheme, via ε-taps: x ← layer(x) + ε_d ⇒ ∂L/∂ε_d is the boundary grad."""
+    cfg = tiny_llama(d=96, layers=DEPTH, vocab=512)
+    cfg = dataclasses.replace(cfg, remat=False, dtype="float32")
+    key = jax.random.PRNGKey(0)
+    dtype = jnp.float32
+    layers = [init_dense_block(k, cfg, dtype)
+              for k in jax.random.split(key, DEPTH)]
+    B, S = 2, 64
+    x0 = jax.random.normal(key, (B, S, cfg.d_model), dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    eps0 = [jnp.zeros_like(x0) for _ in range(DEPTH)]
+
+    def grads_for(qcfg):
+        c = dataclasses.replace(cfg, quartet=qcfg)
+
+        def loss(eps):
+            x = x0
+            for d, lp in enumerate(layers):
+                x, _, _ = dense_block(lp, x + eps[d], pos, jnp.uint32(7), c,
+                                      None, None, "quartet")
+            return jnp.sum(x.astype(jnp.float32) ** 2)
+
+        return jax.jit(jax.grad(loss))(eps0)
+
+    grads = {
+        "reference": grads_for(QuartetConfig(bwd_rounding="none",
+                                             bwd_hadamard="none")),
+        "rtn": grads_for(QuartetConfig(bwd_rounding="rtn",
+                                       bwd_hadamard="random")),
+        "sr": grads_for(QuartetConfig()),
+    }
+
+    rows = []
+    stats = {}
+    for name in ("rtn", "sr"):
+        cos, mag = [], []
+        for d in range(DEPTH):
+            g, r = grads[name][d], grads["reference"][d]
+            cos.append(float(jnp.vdot(g, r) /
+                             (jnp.linalg.norm(g) * jnp.linalg.norm(r))))
+            mag.append(float(jnp.vdot(g, r) / jnp.vdot(r, r)))
+        stats[name] = (cos, mag)
+        # index 0 = deepest (most backprop steps accumulated)
+        rows.append((f"fig2a/{name}/cosine_by_depth", 0.0,
+                     " ".join(f"{c:.3f}" for c in cos)))
+        rows.append((f"fig2b/{name}/magnitude_by_depth", 0.0,
+                     " ".join(f"{m:.3f}" for m in mag)))
+    rtn_cos, sr_cos = stats["rtn"][0][0], stats["sr"][0][0]
+    sr_mag = stats["sr"][1][0]
+    rows.append(("fig2/rtn_cosine>=sr_cosine_at_depth", 0.0,
+                 f"rtn={rtn_cos:.3f} sr={sr_cos:.3f} "
+                 f"{'PASS' if rtn_cos >= sr_cos - 0.02 else 'FAIL'}"))
+    rows.append(("fig2/sr_magnitude_near_1_at_depth", 0.0,
+                 f"{sr_mag:.3f} {'PASS' if abs(sr_mag - 1) < 0.15 else 'FAIL'}"))
+    return rows
+
+
+def _training_consequence():
+    """Fig. 2(c): loss gap vs reference for RTN- vs SR-backward training."""
+    rows = []
+    cfg = tiny_llama(d=64, layers=2, vocab=512)
+    ds = SyntheticC4Dataset(vocab_size=512, seed=3)
+    finals = {}
+    for name, qc in [("sr", QuartetConfig()),
+                     ("rtn", QuartetConfig(bwd_rounding="rtn"))]:
+        c = dataclasses.replace(cfg, quartet=qc)
+        model = build_model(c)
+        for steps in (120, 360):
+            b = TokenBatcher(ds, 8, 64, seed=1)
+            opt = adamw(cosine_warmup(2e-3, steps), weight_decay=0.0)
+            t0 = time.perf_counter()
+            _, hist = train(model, opt, b, steps, log_every=0)
+            us = (time.perf_counter() - t0) * 1e6 / steps
+            final = float(np.mean([h["loss"] for h in hist[-8:]]))
+            finals[(name, steps)] = final
+            rows.append((f"fig2c/{name}_bwd/steps{steps}", us, f"loss={final:.4f}"))
+    gap_short = finals[("sr", 120)] - finals[("rtn", 120)]
+    gap_long = finals[("sr", 360)] - finals[("rtn", 360)]
+    rows.append(("fig2c/sr_gains_with_budget", 0.0,
+                 f"gap(sr-rtn) {gap_short:+.4f} @120 -> {gap_long:+.4f} @360 "
+                 f"(paper: SR overtakes at large D/N)"))
+    return rows
+
+
+def run() -> list[tuple]:
+    return _per_depth_alignment() + _training_consequence()

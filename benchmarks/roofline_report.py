@@ -1,0 +1,50 @@
+"""§Roofline report: reads reports/dryrun.json and emits the per-(arch ×
+shape × mesh) three-term table (+ markdown for EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path="reports/dryrun.json"):
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(path="reports/dryrun.json") -> list[tuple]:
+    rows = []
+    for r in load(path):
+        if r.get("status") != "ok":
+            rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                         f"FAILED: {r.get('error', '?')[:80]}"))
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        derived = (f"dom={r['dominant']} comp={r['compute_s'] * 1e3:.1f}ms "
+                   f"mem={r['memory_s'] * 1e3:.1f}ms coll={r['collective_s'] * 1e3:.1f}ms "
+                   f"useful={r.get('useful_fraction', 0):.3f} "
+                   f"temp={r['bytes_per_device']['temp'] / 2**30:.1f}GiB")
+        rows.append((name, r.get("compile_s", 0) * 1e6, derived))
+    return rows
+
+
+def markdown(path="reports/dryrun.json") -> str:
+    out = ["| arch | shape | mesh | mb | compute | memory* | collective | dominant | useful | temp GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(path):
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | FAIL | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('microbatch', 1)} "
+            f"| {r['compute_s'] * 1e3:.1f}ms | {r['memory_s'] * 1e3:.0f}ms "
+            f"| {r['collective_s'] * 1e3:.1f}ms | {r['dominant']} "
+            f"| {r.get('useful_fraction', 0):.2f} "
+            f"| {r['bytes_per_device']['temp'] / 2**30:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,55 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (per spec)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        ablation_formats,
+        fig1_scaling_law,
+        fig2_gradient_alignment,
+        fig3_kernel_speedups,
+        roofline_report,
+        table2_quantizer_metrics,
+        table3_method_comparison,
+        table7_ptq_vs_native,
+    )
+
+    suites = [
+        ("table2", table2_quantizer_metrics.run),
+        ("fig1", fig1_scaling_law.run),
+        ("fig2", fig2_gradient_alignment.run),
+        ("fig3", fig3_kernel_speedups.run),
+        ("table3", table3_method_comparison.run),
+        ("table7", table7_ptq_vs_native.run),
+        ("ablation", ablation_formats.run),
+        ("roofline", roofline_report.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # pragma: no cover
+            import traceback
+            traceback.print_exc()
+            print(f"{name},0,ERROR: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Table 3 (scaled-down): fully-quantized training method comparison.
+
+The paper pre-trains 30M-param Llamas on C4 at D/N ∈ {25..800} per method.
+On the CPU container we reproduce the *comparison* at tiny scale: identical
+~0.3M-param Llamas on the synthetic C4 stand-in, one per method, at two
+token budgets; the claim under test is the ordering — Quartet lowest loss,
+LUQ-INT4 the strongest prior, Jetfire/HALO-FP4 degraded — not the absolute
+values.  ``FULL=1`` env extends the budgets toward real D/N ratios.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.configs.llama_paper import tiny_llama
+from repro.data.pipeline import SyntheticC4Dataset, TokenBatcher
+from repro.models import build_model
+from repro.optim import adamw, cosine_warmup
+from repro.train.loop import train
+
+METHODS = ["bf16", "quartet", "luq_int4", "luq_fp4", "jetfire_fp4",
+           "halo_fp4", "lss_int4"]
+
+
+def run() -> list[tuple]:
+    full = bool(int(os.environ.get("FULL", "0")))
+    steps_grid = [150, 300] if not full else [300, 1200, 4800]
+    cfg = tiny_llama(d=64, layers=2, vocab=512)
+    model = build_model(cfg)
+    ds = SyntheticC4Dataset(vocab_size=cfg.vocab_size, seed=7)
+
+    rows = []
+    finals: dict[str, list[float]] = {}
+    for method in METHODS:
+        finals[method] = []
+        for steps in steps_grid:
+            batcher = TokenBatcher(ds, global_batch=8, seq_len=64, seed=1)
+            opt = adamw(cosine_warmup(2e-3, steps), weight_decay=0.0)
+            t0 = time.perf_counter()
+            try:
+                _, hist = train(model, opt, batcher, steps, method=method,
+                                log_every=0)
+                losses = [h["loss"] for h in hist[-10:]]
+                final = float(np.mean(losses))
+                if not np.isfinite(final):
+                    final = float("nan")
+            except FloatingPointError:
+                final = float("nan")
+            us = (time.perf_counter() - t0) * 1e6 / max(steps, 1)
+            finals[method].append(final)
+            rows.append((f"table3/{method}/steps{steps}", us, f"loss={final:.4f}"))
+
+    # ordering checks at the largest budget (paper's qualitative claims)
+    last = {m: finals[m][-1] for m in METHODS}
+    q, bf = last["quartet"], last["bf16"]
+    prior_best = np.nanmin([last[m] for m in METHODS if m not in ("quartet", "bf16")])
+    rows.append(("table3/quartet_beats_all_4bit_priors", 0.0,
+                 "PASS" if q < prior_best else f"FAIL q={q:.3f} prior={prior_best:.3f}"))
+    rows.append(("table3/quartet_near_bf16", 0.0,
+                 f"gap={q - bf:+.4f} (paper: near-lossless at high D/N)"))
+    return rows

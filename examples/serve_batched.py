@@ -1,0 +1,68 @@
+"""Serving example (deliverable b): batched prefill + incremental decode with
+the per-family cache engine, for any architecture.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch falcon-mamba-7b
+  PYTHONPATH=src python examples/serve_batched.py --arch whisper-tiny
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.train.serve import greedy_generate, init_cache, make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+
+    extra = None
+    if cfg.family == "encdec":
+        extra = {"source_embeds": jax.random.normal(
+            key, (args.batch, cfg.max_source_len, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "vlm":
+        extra = {"image_embeds": jax.random.normal(
+            key, (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)}
+
+    # explicit prefill/decode (what a serving loop does per request batch)
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+    caches = init_cache(model, args.batch, args.prompt_len + args.max_new)
+    t0 = time.time()
+    logits, caches, pos = prefill(params, prompt, caches, extra)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    generated = [tok]
+    for _ in range(args.max_new - 1):
+        logits, caches, pos = decode(params, tok, pos, caches)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+    out.block_until_ready()
+    dt = time.time() - t0
+    print(f"{cfg.name}: prefill({args.batch}×{args.prompt_len}) + "
+          f"{args.max_new} decode steps in {dt:.2f}s "
+          f"→ {args.batch * args.max_new / dt:.1f} tok/s (CPU, reduced config)")
+    print("sample:", out[0])
+
+    # one-call wrapper used by tests
+    out2 = greedy_generate(model, params, prompt, max_new=4,
+                           max_len=args.prompt_len + 4, extra=extra)
+    print("greedy_generate:", out2.shape)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Quartet reproduction: native MXFP4 training as a TPU-native JAX framework.
+
+Layers (DESIGN.md §3): core (the paper's algorithm), kernels (Pallas),
+models (10-arch zoo), configs, data, optim, distributed, checkpoint, train,
+launch (mesh / dry-run / roofline / entry points).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: sharded, atomic, async, elastic."""
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401

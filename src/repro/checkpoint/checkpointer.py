@@ -1,0 +1,146 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout (one directory per step):
+
+    <dir>/step_000123.tmp/           # written first
+        meta.json                    # pytree structure + shapes + dtypes
+        <leaf-idx>.npy               # one file per pytree leaf (host arrays)
+    <dir>/step_000123/               # atomic rename when complete
+
+Design points for 1000+-node runs:
+  * atomic visibility: readers never see partial checkpoints (rename is the
+    commit point; a crashed writer leaves only a .tmp to be garbage-collected);
+  * async: serialization happens on a background thread off the step loop —
+    the step only pays for the device→host copy;
+  * keep-K retention with GC;
+  * elastic restore: arrays are loaded to host then ``jax.device_put`` with
+    the *target* sharding — the new mesh may differ from the writer's
+    (scale-up/down restart), since leaves are stored unsharded.  Per-shard
+    parallel writes (one file per shard) slot in behind the same API when
+    hosts have disjoint filesystems; this single-host implementation writes
+    assembled arrays.
+  * data-pipeline state (step) rides in meta.json, so resume replays the
+    exact token stream (pipeline is position-addressable).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ----------------------------------------------------------- save
+    def save(self, step: int, state, extra_meta: dict | None = None,
+             blocking: bool = False):
+        """Snapshot to host memory now; write to disk on a background thread."""
+        self.wait()  # one outstanding write at a time
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        meta = {
+            "step": int(step),
+            # structure is re-derived from `state_like` at restore; only the
+            # leaf count is needed for integrity checking
+            "num_leaves": len(host_leaves),
+            "shapes": [list(x.shape) for x in host_leaves],
+            "dtypes": [str(x.dtype) for x in host_leaves],
+            "time": time.time(),
+            **(extra_meta or {}),
+        }
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            for i, arr in enumerate(host_leaves):
+                # ml_dtypes (bfloat16, fp8, ...) round-trip through npy as
+                # void; store their raw bits as uintN and re-view on restore
+                if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+                    arr = arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
+                np.save(os.path.join(tmp, f"{i}.npy"), arr)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # commit point
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+        # remove orphaned .tmp dirs from crashed writers
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    # -------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: int | None = None, shardings=None):
+        """Restore into the structure of ``state_like``.
+
+        ``shardings``: optional pytree of NamedSharding for elastic placement
+        onto a (possibly different) mesh.  Returns (state, meta).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        leaves_like, treedef = jax.tree_util.tree_flatten(state_like)
+        assert meta["num_leaves"] == len(leaves_like), \
+            f"checkpoint has {meta['num_leaves']} leaves, state needs {len(leaves_like)}"
+        for i, (like, shp) in enumerate(zip(leaves_like, meta["shapes"])):
+            assert tuple(like.shape) == tuple(shp), \
+                f"leaf {i}: checkpoint shape {shp} != expected {tuple(like.shape)}"
+        import ml_dtypes  # noqa: F401  (registers bfloat16 & friends)
+
+        host = []
+        for i in range(len(leaves_like)):
+            arr = np.load(os.path.join(d, f"{i}.npy"))
+            want = np.dtype(meta["dtypes"][i])
+            if arr.dtype != want:
+                arr = arr.view(want)
+            host.append(arr)
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec") or x is None)
+            new = [jax.device_put(a, s) if s is not None else jax.device_put(a)
+                   for a, s in zip(host, sh_leaves)]
+        else:
+            new = [jax.device_put(a) for a in host]
+        return jax.tree_util.tree_unflatten(treedef, new), meta

@@ -1,0 +1,17 @@
+"""Architecture configs: the 10 assigned architectures (exact public-literature
+dimensions) + the paper's own Llama 30M..7B family.  ``get_config(name)``
+resolves ids like "qwen3-moe-235b-a22b"; each module also exports ``reduced()``
+— a small same-family variant for CPU smoke tests."""
+
+from repro.configs.base import (  # noqa: F401
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    TRAIN_4K,
+    DECODE_32K,
+    ModelConfig,
+    ShapeConfig,
+    input_specs,
+    shapes_for,
+)
+from repro.configs.registry import ARCH_IDS, get_config, get_reduced_config  # noqa: F401

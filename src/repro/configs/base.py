@@ -1,0 +1,215 @@
+"""Model / shape configuration system.
+
+Every assigned architecture is one ``ModelConfig`` in ``repro/configs/<id>.py``
+(exact public-literature dimensions) plus a ``reduced()`` variant for CPU smoke
+tests.  Shapes are the four assigned input-shape cells; ``input_specs`` builds
+ShapeDtypeStruct stand-ins so full configs never allocate memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quartet import QUARTET_CONFIG, QuartetConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    mlp: Literal["swiglu", "gelu"] = "swiglu"
+    use_bias: bool = False
+    qk_norm: bool = False
+    pos_embed: Literal["rope", "absolute", "none"] = "rope"
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    router_zloss: float = 1e-3
+
+    # SSM (mamba1 / mamba2)
+    ssm_state: int = 0
+    ssm_variant: Literal["", "mamba1", "mamba2"] = ""
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64  # mamba2
+    ssm_chunk: int = 128
+
+    # hybrid (zamba2): one shared attention block applied every N mamba blocks
+    attn_every: int = 0
+
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    max_source_len: int = 1500  # whisper frame count (30 s)
+
+    # vlm: cross-attention to image tokens every N layers
+    cross_attn_every: int = 0
+    num_image_tokens: int = 0
+
+    # numerics / technique
+    quartet: QuartetConfig = QUARTET_CONFIG
+    quantize_lm_head: bool = False  # paper quantizes transformer linears
+    dtype: str = "bfloat16"
+
+    # execution
+    attn_q_chunk: int = 1024  # flash-style blocking for long sequences
+    attn_kv_chunk: int = 1024
+    remat: bool = True
+    # "full": recompute everything (paper-faithful baseline);
+    # "dots": save no-batch-dim dot outputs (skips fwd GEMM recompute — §Perf)
+    remat_policy: str = "full"
+    scan_layers: bool = True
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def is_causal_lm(self) -> bool:
+        return self.family in ("dense", "moe", "ssm", "hybrid", "vlm")
+
+    def n_params(self, non_embedding: bool = True) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS and roofline)."""
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        hd = self.head_dim_
+        nq, nkv = self.num_heads, self.num_kv_heads
+        attn = d * hd * (nq + 2 * nkv) + nq * hd * d
+        if self.mlp == "swiglu":
+            ffn = 3 * d * f
+        else:
+            ffn = 2 * d * f
+        per_layer = 0
+        if self.family in ("dense", "vlm", "encdec"):
+            per_layer = attn + ffn
+        elif self.family == "moe":
+            per_layer = attn + self.num_experts * ffn + d * self.num_experts
+            if self.moe_dense_residual:
+                per_layer += ffn
+        elif self.family == "ssm":
+            per_layer = _mamba_params(self)
+        elif self.family == "hybrid":
+            mamba = _mamba_params(self)
+            n_attn = L // max(self.attn_every, 1)
+            per_layer = mamba  # per mamba block; attn added below
+            extra = n_attn * (attn + ffn)
+            total = L * per_layer + extra
+            if not non_embedding:
+                total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+            return total
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = L // self.cross_attn_every
+            per_layer_total = L * per_layer + n_cross * attn
+        else:
+            per_layer_total = L * per_layer
+        total = per_layer_total
+        if not non_embedding:
+            total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def n_active_params(self) -> int:
+        """Active (per-token) parameters — MoE uses top-k experts only."""
+        if self.family != "moe":
+            return self.n_params()
+        d, f, L = self.d_model, self.d_ff, self.num_layers
+        hd = self.head_dim_
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        ffn = (3 if self.mlp == "swiglu" else 2) * d * f
+        act = attn + self.experts_per_token * ffn + d * self.num_experts
+        if self.moe_dense_residual:
+            act += ffn
+        return L * act
+
+
+def _mamba_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    if cfg.ssm_variant == "mamba2":
+        nh = di // cfg.ssm_head_dim
+        return d * (2 * di + 2 * n * 1 + nh) + di * cfg.ssm_conv + di * d + 3 * nh
+    # mamba1
+    dt_rank = max(d // 16, 1)
+    return (d * 2 * di + di * cfg.ssm_conv + di * (dt_rank + 2 * n)
+            + dt_rank * di + di * n + di * d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES: dict[str, ShapeConfig] = {
+    s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+}
+
+# long_500k needs sub-quadratic sequence handling: run only for SSM/hybrid.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shapes_for(cfg: ModelConfig) -> list[ShapeConfig]:
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.family in LONG_CONTEXT_FAMILIES:
+        out.append(LONG_500K)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:    tokens + labels [B, S]
+    prefill:  tokens [B, S]
+    decode:   tokens [B, 1] + position + the KV/SSM cache (built separately
+              by the serving engine; see repro.train.serve.cache_specs)
+    Modality frontends are stubs per spec: audio/vision arrive as precomputed
+    frame/patch embeddings.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token against a length-S cache
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "position": jax.ShapeDtypeStruct((B,), i32),
+        }
+    if cfg.family == "encdec":
+        # audio stub: precomputed conv-frontend frame embeddings
+        specs["source_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.max_source_len, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return specs

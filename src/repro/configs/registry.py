@@ -1,0 +1,39 @@
+"""Config registry: ``--arch <id>`` resolution for launchers and tests."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen3-1.7b": "repro.configs.qwen3_1p7b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    if name in _MODULES:
+        cfg = importlib.import_module(_MODULES[name]).CONFIG
+    else:
+        from repro.configs.llama_paper import PAPER_FAMILY
+        if name not in PAPER_FAMILY:
+            raise ValueError(f"unknown arch {name!r}; have {ARCH_IDS} + paper family")
+        cfg = PAPER_FAMILY[name]
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_reduced_config(name: str, **overrides) -> ModelConfig:
+    cfg = importlib.import_module(_MODULES[name]).reduced()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg

@@ -1,0 +1,41 @@
+"""Core of the Quartet reproduction: formats, quantizers, Algorithm 1,
+baseline methods, scaling-law machinery, and gradient-quality metrics."""
+
+from repro.core.formats import (  # noqa: F401
+    BF16,
+    FORMATS,
+    INT4,
+    INT8,
+    MXFP4,
+    MXFP8,
+    NVFP4,
+    Format,
+    get_format,
+)
+from repro.core.hadamard import (  # noqa: F401
+    hadamard_transform,
+    inverse_hadamard_transform,
+    randomized_hadamard_transform,
+)
+from repro.core.quantizers import (  # noqa: F401
+    QuantResult,
+    quest,
+    rtn_absmax,
+    rtn_absmax_pma,
+    sr_absmax,
+)
+from repro.core.quartet import (  # noqa: F401
+    BF16_CONFIG,
+    FP8_CONFIG,
+    QUARTET_CONFIG,
+    QuartetConfig,
+    quartet_linear,
+)
+from repro.core.baselines import BASELINE_METHODS, baseline_linear  # noqa: F401
+from repro.core.scaling_law import (  # noqa: F401
+    ScalingLaw,
+    fit_baseline,
+    fit_efficiencies,
+    optimality_region,
+)
+from repro.core import metrics  # noqa: F401

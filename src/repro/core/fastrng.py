@@ -1,0 +1,63 @@
+"""Counter-based inline PRNG for stochastic rounding.
+
+``jax.random.uniform`` materializes a u32 buffer per element and lowers large
+threefry batches as while loops — for Quartet that meant ~0.5 GB of random
+bits per backward GEMM operand held live across the layer scan.  SR needs
+*decorrelated*, not cryptographic, randomness; hardware kernels draw it from
+a per-element counter hash in registers.  This is the JAX analogue: iota →
+murmur3-finalizer hash → 24-bit uniform, fully fused into the consumer
+(no buffers, no loops), deterministic in (seed, salt, element index).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _murmur3_fmix(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+import jax
+
+
+def random_bits(seed: jnp.ndarray, shape, salt: int = 0) -> jnp.ndarray:
+    """u32 bits, shape ``shape``; seed is a traced uint32 scalar.
+
+    The element index is built from per-dimension ``broadcasted_iota``s (the
+    linear index Σ i_d·stride_d), NOT a flat arange+reshape: GSPMD can shard
+    broadcasted iotas along any partitioned dim, whereas a rank-1 iota
+    reshaped to N-D falls back to full replication (an 8 GB buffer for a
+    global-batch dW quantization).
+    """
+    shape = tuple(shape) if shape else (1,)
+    lin = jnp.zeros(shape, jnp.uint32)
+    stride = 1
+    for d in range(len(shape) - 1, -1, -1):
+        lin = lin + jax.lax.broadcasted_iota(jnp.uint32, shape, d) * jnp.uint32(stride % (2**32))
+        stride *= shape[d]
+    h = lin * jnp.uint32(2654435761)
+    h = h + jnp.asarray(seed, jnp.uint32) * jnp.uint32(2246822519)
+    h = h + jnp.uint32(salt % (2**32)) * jnp.uint32(3266489917)
+    # two fmix rounds: passes basic equidistribution; plenty for SR dither
+    h = _murmur3_fmix(h)
+    h = _murmur3_fmix(h + jnp.uint32(0x9E3779B9))
+    return h
+
+
+def uniform(seed: jnp.ndarray, shape, salt: int = 0) -> jnp.ndarray:
+    """U[0, 1) float32 from the top 24 bits (exactly representable)."""
+    bits = random_bits(seed, shape, salt)
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def rademacher(seed: jnp.ndarray, n: int, salt: int = 0) -> jnp.ndarray:
+    """±1 f32 signs for the randomized Hadamard transform."""
+    bits = random_bits(seed, (n,), salt)
+    return jnp.where((bits & 1) == 1, 1.0, -1.0).astype(jnp.float32)

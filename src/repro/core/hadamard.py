@@ -1,0 +1,88 @@
+"""Grouped (block-diagonal) Hadamard transforms.
+
+Quartet applies the Hadamard transform at the MXFP4 scaling-group size
+(g = 32): the forward pass uses the *fixed* transform ``H_g``, the backward
+pass the *randomized* transform ``Ĥ_g(x, ξ) = H_g · diag(ξ)`` with Rademacher
+signs ξ shared between the two operands of each backward GEMM, which keeps
+the GEMM exact under rotation: (x D H)(H D w) = x w  since H·H = I and D² = I.
+
+The normalized Hadamard matrix is symmetric and involutory (H = Hᵀ = H⁻¹),
+so "inverse Hadamard" below is the transform itself.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def hadamard_matrix(g: int) -> np.ndarray:
+    """Normalized g×g Hadamard matrix (Sylvester construction), g = 2^k."""
+    if g & (g - 1) != 0 or g <= 0:
+        raise ValueError(f"group size must be a power of two, got {g}")
+    h = np.array([[1.0]])
+    while h.shape[0] < g:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(g)).astype(np.float32)
+
+
+def _hmat(g: int, dtype) -> jnp.ndarray:
+    return jnp.asarray(hadamard_matrix(g), dtype=dtype)
+
+
+def hadamard_transform(x: jnp.ndarray, g: int = 32, axis: int = -1) -> jnp.ndarray:
+    """Apply the fixed grouped Hadamard transform along ``axis``.
+
+    The axis length must be divisible by ``g``; each contiguous group of ``g``
+    elements is rotated independently (the "Grouped Hadamard Transform" of the
+    paper, matching the MXFP4 block size).
+    """
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, -1)
+    k = x.shape[-1]
+    if k % g != 0:
+        raise ValueError(f"axis length {k} not divisible by hadamard group {g}")
+    shape = x.shape
+    xb = x.reshape(*shape[:-1], k // g, g)
+    out = jnp.einsum("...g,gh->...h", xb, _hmat(g, x.dtype)).reshape(shape)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def rademacher_signs(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """ξ ∈ {±1}ⁿ. One sign per coordinate of the transformed axis."""
+    return jax.random.rademacher(key, (n,), dtype=dtype)
+
+
+def randomized_hadamard_transform(
+    x: jnp.ndarray, signs: jnp.ndarray, g: int = 32, axis: int = -1
+) -> jnp.ndarray:
+    """Ĥ_g(x, ξ): sign-flip then grouped Hadamard along ``axis``.
+
+    ``signs`` has length equal to ``x.shape[axis]``; using the same signs on
+    both GEMM operands preserves the product exactly (before quantization).
+    """
+    axis = axis % x.ndim
+    shape = [1] * x.ndim
+    shape[axis] = x.shape[axis]
+    x = x * signs.reshape(shape).astype(x.dtype)
+    return hadamard_transform(x, g=g, axis=axis)
+
+
+def inverse_randomized_hadamard_transform(
+    x: jnp.ndarray, signs: jnp.ndarray, g: int = 32, axis: int = -1
+) -> jnp.ndarray:
+    """Ĥ_g⁻¹ = diag(ξ) · H_g  (H is involutory, D² = I)."""
+    axis = axis % x.ndim
+    x = hadamard_transform(x, g=g, axis=axis)
+    shape = [1] * x.ndim
+    shape[axis] = x.shape[axis]
+    return x * signs.reshape(shape).astype(x.dtype)
+
+
+def inverse_hadamard_transform(x: jnp.ndarray, g: int = 32, axis: int = -1) -> jnp.ndarray:
+    """H_g⁻¹ = H_g."""
+    return hadamard_transform(x, g=g, axis=axis)

@@ -1,0 +1,209 @@
+"""Quantizer zoo: the four forward schemes of Table 2 + backward SR variants.
+
+Every quantizer maps a tensor to a block-scaled low-precision representation
+and returns a :class:`QuantResult` carrying
+
+  * ``values``  — dequantized values (scale · grid-point); feeding these to a
+                  fp32-accumulating GEMM is *bit-exact* w.r.t. native
+                  block-scaled FP4 hardware (E2M1 products fit in ≤4 mantissa
+                  bits, E8M0 scales are exact powers of two),
+  * ``codes``   — grid indices (int8) for storage-realistic paths,
+  * ``scales``  — per-block scales (after the format's scale-dtype rounding),
+  * ``mask``    — QuEST clip mask (1 where |x/s| within grid; used as the
+                  straight-through "trust" gradient estimator).
+
+Blocks are 1-D along the **last axis** (the GEMM contraction axis), matching
+MX semantics; callers move the contraction axis last before quantizing.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core.formats import Format
+
+
+class QuantResult(NamedTuple):
+    values: jnp.ndarray  # same shape/dtype-f32 as input, on-grid × scale
+    codes: jnp.ndarray  # int8 grid indices, same shape as input
+    scales: jnp.ndarray  # [..., K/block] fp32 (post scale-dtype rounding)
+    mask: jnp.ndarray  # bool, same shape as input (True = inside grid)
+
+
+def _block_scales(x: jnp.ndarray, fmt: Format, kind: str) -> jnp.ndarray:
+    """Raw (pre-rounding) per-block scales. kind: 'absmax' | 'rms'."""
+    block = fmt.block if fmt.block > 0 else x.shape[-1]
+    xb = F.to_blocks(x, block)
+    if kind == "absmax":
+        raw = jnp.max(jnp.abs(xb), axis=-1) / fmt.max_value
+    elif kind == "rms":
+        c = F.gaussian_optimal_clip(fmt.name)
+        rms = jnp.sqrt(jnp.mean(xb.astype(jnp.float32) ** 2, axis=-1))
+        raw = c * rms / fmt.max_value
+    else:
+        raise ValueError(kind)
+    return jnp.maximum(raw, 2.0**F.E8M0_MIN_EXP)
+
+
+def _codes_from_values(q: jnp.ndarray, fmt: Format) -> jnp.ndarray:
+    """"Half-codes": int8 = 2 × grid value (E2M1 → ±{0,1,2,3,4,6,8,12}).
+
+    Dequantization is then ``code * 0.5 * scale`` — pure arithmetic, no table
+    gather — which is what the Pallas GEMM kernel does per-tile in VMEM.
+    Used for 4-bit grids (E2M1, INT4); wider grids fall back to grid indices.
+    """
+    if fmt.max_value <= 63.0:  # static per-format property
+        return jnp.round(q * 2.0).astype(jnp.int8)
+    return jnp.searchsorted(fmt.grid_array, q).astype(jnp.int8)
+
+
+def _finish(
+    x: jnp.ndarray, scales: jnp.ndarray, fmt: Format, q_scaled: jnp.ndarray
+) -> QuantResult:
+    block = fmt.block if fmt.block > 0 else x.shape[-1]
+    values = F.from_blocks(q_scaled * scales[..., None]).astype(jnp.float32)
+    codes = F.from_blocks(_codes_from_values(q_scaled, fmt))
+    xb = F.to_blocks(jnp.asarray(x, jnp.float32), block)
+    mask = F.from_blocks(jnp.abs(xb / scales[..., None]) <= fmt.max_value)
+    return QuantResult(values, codes, scales, mask)
+
+
+# ---------------------------------------------------------------------------
+# Forward-pass quantizers (Table 2)
+# ---------------------------------------------------------------------------
+
+
+def rtn_absmax(x: jnp.ndarray, fmt: Format = F.MXFP4, scale_mode: str = "ceil") -> QuantResult:
+    """Round-to-nearest with per-block AbsMax scales."""
+    block = fmt.block if fmt.block > 0 else x.shape[-1]
+    scales = F.quantize_scale(_block_scales(x, fmt, "absmax"), fmt, scale_mode)
+    xb = F.to_blocks(jnp.asarray(x, jnp.float32), block)
+    if fmt.name in ("mxfp4", "nvfp4"):
+        q = F.rtn_e2m1(xb / scales[..., None])  # hardware-exact E2M1 cast
+    else:
+        q = F.rtn_to_grid(jnp.clip(xb / scales[..., None], -fmt.max_value, fmt.max_value), fmt.grid_array)
+    return _finish(x, scales, fmt, q)
+
+
+def sr_absmax(
+    x: jnp.ndarray, key: jax.Array, fmt: Format = F.MXFP4, scale_mode: str = "ceil"
+) -> QuantResult:
+    """Stochastic rounding with per-block AbsMax scales.
+
+    With ``scale_mode='ceil'`` (power-of-two rounded *up*) no value can exceed
+    the grid max, so SR is exactly unbiased: E[Q(x)] = x.
+    """
+    block = fmt.block if fmt.block > 0 else x.shape[-1]
+    scales = F.quantize_scale(_block_scales(x, fmt, "absmax"), fmt, scale_mode)
+    xb = F.to_blocks(jnp.asarray(x, jnp.float32), block)
+    u = jax.random.uniform(key, xb.shape, jnp.float32)
+    q = F.stochastic_round_to_grid(xb / scales[..., None], fmt.grid_array, u)
+    return _finish(x, scales, fmt, q)
+
+
+def sr_absmax_fast(x: jnp.ndarray, seed: jnp.ndarray, fmt: Format = F.MXFP4,
+                   scale_mode: str = "ceil", salt: int = 0) -> QuantResult:
+    """SR with the fused counter-hash PRNG (no materialized random buffers).
+
+    Used on the training hot path (Quartet backward); numerically an SR with
+    a different, still element-decorrelated uniform source — unbiasedness is
+    property-tested in tests/test_quantizers.py.
+    """
+    from repro.core import fastrng
+
+    block = fmt.block if fmt.block > 0 else x.shape[-1]
+    scales = F.quantize_scale(_block_scales(x, fmt, "absmax"), fmt, scale_mode)
+    xb = F.to_blocks(jnp.asarray(x, jnp.float32), block)
+    u = fastrng.uniform(seed, xb.shape, salt)
+    q = F.stochastic_round_to_grid(xb / scales[..., None], fmt.grid_array, u)
+    return _finish(x, scales, fmt, q)
+
+
+def quest(x: jnp.ndarray, fmt: Format = F.MXFP4, scale_mode: str = "nearest") -> QuantResult:
+    """QuEST [33]: RMSE-optimal (Gaussian-fit) clip scale + RTN + trust mask.
+
+    Callers apply the Hadamard transform first (Gaussianizing each block), so
+    the fixed ``c*·rms`` scale is near-MSE-optimal.  Values beyond the clip
+    point saturate; the returned mask zeroes their gradient (trust estimator).
+    """
+    block = fmt.block if fmt.block > 0 else x.shape[-1]
+    scales = F.quantize_scale(_block_scales(x, fmt, "rms"), fmt, scale_mode)
+    xb = F.to_blocks(jnp.asarray(x, jnp.float32), block)
+    scaled = jnp.clip(xb / scales[..., None], -fmt.max_value, fmt.max_value)
+    if fmt.name in ("mxfp4", "nvfp4"):
+        q = F.rtn_e2m1(scaled)
+    else:
+        q = F.rtn_to_grid(scaled, fmt.grid_array)
+    return _finish(x, scales, fmt, q)
+
+
+def rtn_absmax_pma(x: jnp.ndarray, fmt: Format = F.MXFP4) -> QuantResult:
+    """RTN AbsMax PMA (paper §4.3): pseudo-unbiased RTN.
+
+    Multiplies the dequantized output by a constant ≈ E[S] precomputed for
+    Gaussian inputs, cancelling the *average* magnitude shrinkage of RTN. Not
+    truly unbiased (S correlates with Q(X)) — reproduced here because Table 2
+    / Fig. 2 show it degrading at large D/N exactly for that reason.
+    """
+    r = rtn_absmax(x, fmt, scale_mode="ceil")
+    gamma = pma_gamma(fmt)
+    return QuantResult(r.values * gamma, r.codes, r.scales * gamma, r.mask)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def pma_gamma(fmt: Format) -> float:
+    """E[S] for Gaussian blocks under RTN-AbsMax with this format (host-side)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    block = fmt.block if fmt.block > 0 else 32
+    x = rng.standard_normal((4096, block)).astype(np.float32)
+    import jax.numpy as jnp_  # noqa
+
+    r = rtn_absmax(jnp.asarray(x), fmt, scale_mode="ceil")
+    q = jax.device_get(r.values)
+    num = float((x * x).sum())
+    den = float((x * q).sum())
+    return num / max(den, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# LSQ (learned step size; used by the method-comparison harness)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _lsq_round(x: jnp.ndarray, step: jnp.ndarray, qmax: float):
+    q = jnp.clip(jnp.round(x / step), -qmax, qmax)
+    return q * step
+
+
+def _lsq_fwd(x, step, qmax):
+    return _lsq_round(x, step, qmax), (x, step, qmax)
+
+
+def _lsq_bwd(res, g):
+    x, step, qmax = res
+    v = x / step
+    inside = (jnp.abs(v) <= qmax).astype(g.dtype)
+    # LSQ gradient w.r.t. step: (round(v)-v) inside, ±qmax at the clip points
+    q = jnp.clip(jnp.round(v), -qmax, qmax)
+    dstep = jnp.sum(g * jnp.where(inside > 0, q - v, jnp.sign(v) * qmax))
+    grad_scale = 1.0 / jnp.sqrt(qmax * x.size)
+    return g * inside, dstep * grad_scale, None
+
+
+_lsq_round.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq(x: jnp.ndarray, step: jnp.ndarray, fmt: Format = F.INT4) -> jnp.ndarray:
+    """LSQ [17] with a learnable per-tensor step (uniform grid formats)."""
+    qmax = fmt.max_value
+    return _lsq_round(x, step, qmax)

@@ -1,0 +1,450 @@
+"""Quartet (Algorithm 1): all three linear-layer GEMMs in MXFP4.
+
+Forward:  fixed block-32 Hadamard on X, W along the contraction dim K →
+          QuEST projection (RMSE clip + RTN, E8M0 nearest scales) → LP GEMM.
+Backward: randomized block-32 Hadamard Ĥ(·, ξ) along each backward GEMM's
+          contraction dim (N for dx, B for dW) with signs ξ shared between the
+          two operands → stochastic rounding of ¾·(·) (E8M0 ceil scales → no
+          clipping → unbiased) → LP GEMMs → ×16/9 → ⊙ QuEST masks → H⁻¹.
+
+The LP GEMMs run as dequantize-to-f32 + fp32-accumulate contractions, which is
+bit-exact w.r.t. native block-scaled FP4 tensor-core GEMMs (DESIGN.md §2).
+``use_kernels=True`` routes quantization + GEMM through the Pallas TPU kernels
+in ``repro.kernels`` (validated in interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fastrng
+from repro.core import formats as F
+from repro.core import quantizers as Q
+from repro.core.hadamard import (
+    hadamard_transform,
+    randomized_hadamard_transform,
+)
+
+SR_PRESCALE = 0.75  # the ¾ factor of Algorithm 1
+SR_POSTSCALE = 16.0 / 9.0  # undoes (¾)² on the GEMM product
+
+
+@dataclasses.dataclass(frozen=True)
+class QuartetConfig:
+    """Static configuration of the Quartet linear layer."""
+
+    fwd_format: str = "mxfp4"
+    bwd_format: str = "mxfp4"
+    group: int = 32  # Hadamard group == MXFP4 scale block
+    fwd_quantizer: Literal["quest", "rtn_absmax", "sr_absmax", "none"] = "quest"
+    bwd_rounding: Literal["sr", "rtn", "none"] = "sr"
+    bwd_hadamard: Literal["random", "fixed", "none"] = "random"
+    use_kernels: bool = False
+    accum_dtype: str = "float32"
+    # beyond-paper: FSDP-sharded weights cross the interconnect as 4-bit
+    # codes (quantize shard-local → all-gather codes → dequant); exact same
+    # math as the paper's forward — the block-32 Hadamard is block-diagonal,
+    # so it commutes with K-dim sharding.  See quest_qdq_gathered.
+    fp4_allgather: bool = False
+
+    @property
+    def fwd_fmt(self) -> F.Format:
+        return F.get_format(self.fwd_format)
+
+    @property
+    def bwd_fmt(self) -> F.Format:
+        return F.get_format(self.bwd_format)
+
+
+BF16_CONFIG = QuartetConfig(fwd_quantizer="none", bwd_rounding="none", bwd_hadamard="none")
+FP8_CONFIG = QuartetConfig(
+    fwd_format="mxfp8", bwd_format="mxfp8", fwd_quantizer="rtn_absmax",
+    bwd_rounding="rtn", bwd_hadamard="none",
+)
+QUARTET_CONFIG = QuartetConfig()
+
+
+def _float0_like(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers (contraction axis must be last)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_quantize(xh: jnp.ndarray, cfg: QuartetConfig, key: jax.Array) -> Q.QuantResult:
+    fmt = cfg.fwd_fmt
+    if cfg.fwd_quantizer == "quest":
+        return Q.quest(xh, fmt)
+    if cfg.fwd_quantizer == "rtn_absmax":
+        return Q.rtn_absmax(xh, fmt)
+    if cfg.fwd_quantizer == "sr_absmax":
+        return Q.sr_absmax(xh, key, fmt)
+    raise ValueError(cfg.fwd_quantizer)
+
+
+def _bwd_quantize(gh: jnp.ndarray, cfg: QuartetConfig, seed: jnp.ndarray,
+                  salt: int) -> jnp.ndarray:
+    """Quantize a backward operand (already Hadamard-rotated, blocks on last
+    axis).  SR randomness comes from the fused counter-hash PRNG — threefry
+    would materialize a u32 buffer per element (core/fastrng.py)."""
+    fmt = cfg.bwd_fmt
+    if cfg.bwd_rounding == "sr":
+        v = Q.sr_absmax_fast(gh * SR_PRESCALE, seed, fmt, "ceil", salt).values
+    elif cfg.bwd_rounding == "rtn":
+        v = Q.rtn_absmax(gh * SR_PRESCALE, fmt, scale_mode="ceil").values
+    else:
+        raise ValueError(cfg.bwd_rounding)
+    return v.astype(jnp.bfloat16)  # bf16-exact (see _quartet_fwd)
+
+
+def _maybe_rht(x: jnp.ndarray, signs: jnp.ndarray, cfg: QuartetConfig, axis: int) -> jnp.ndarray:
+    if cfg.bwd_hadamard == "random":
+        return randomized_hadamard_transform(x, signs, g=cfg.group, axis=axis)
+    if cfg.bwd_hadamard == "fixed":
+        return hadamard_transform(x, g=cfg.group, axis=axis)
+    return x
+
+
+def _gemm(a: jnp.ndarray, b: jnp.ndarray, accum_dtype) -> jnp.ndarray:
+    """a [..., K] @ b [K, N] with fp32 accumulation (MXU semantics)."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.dtype(accum_dtype),
+    )
+
+
+def _pad32(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to a multiple of 32.  Exact for backward GEMMs:
+    padded positions quantize to zero and contribute nothing to the product."""
+    n = x.shape[axis]
+    pad = (-n) % 32
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# quartet_linear: custom-VJP linear layer
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def quartet_linear(x: jnp.ndarray, w: jnp.ndarray, seed: jnp.ndarray, cfg: QuartetConfig):
+    """y = Quartet(x) @ Quartet(w).  x: [..., K], w: [K, N], seed: uint32[]."""
+    y, _ = _quartet_fwd(x, w, seed, cfg)
+    return y
+
+
+def _quartet_fwd(x, w, seed, cfg: QuartetConfig):
+    if cfg.fwd_quantizer == "none":  # bf16 passthrough (baseline)
+        y = _gemm(x, w, cfg.accum_dtype).astype(x.dtype)
+        return y, (x, w, seed)
+
+    sent_x = jnp.zeros((0,), x.dtype)  # dtype carriers for the bwd casts
+    sent_w = jnp.zeros((0,), w.dtype)
+
+    if cfg.use_kernels:
+        from repro.kernels import ops as K
+
+        # Stage 1 (fused Hadamard+QuEST), then Stage 2 (block-scaled GEMM).
+        xc, xs, xm = K.hadamard_quest_quantize(x, group=cfg.group)
+        wtc, wts, wtm = K.hadamard_quest_quantize(jnp.swapaxes(w, 0, 1), group=cfg.group)
+        y = K.mxfp4_matmul(xc, xs, jnp.swapaxes(wtc, 0, 1), jnp.swapaxes(wts, 0, 1))
+        y = y.astype(x.dtype)
+        # residuals are the true 4-bit payload: codes + per-32 scales + masks
+        return y, ((xc, xs), (wtc, wts), xm, jnp.swapaxes(wtm, 0, 1), seed, sent_x, sent_w)
+
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    xh = hadamard_transform(x.astype(jnp.float32), g=cfg.group, axis=-1)
+    wh = hadamard_transform(w.astype(jnp.float32), g=cfg.group, axis=0)
+    xq = _fwd_quantize(xh, cfg, key)
+    wq = _fwd_quantize(jnp.swapaxes(wh, 0, 1), cfg, key)  # blocks along K
+    # QDQ values are bf16-exact (≤2 mantissa bits × pow2 scale): bf16 GEMM
+    # operands + residuals are bit-identical and halve bytes (§Perf iter.)
+    xv = xq.values.astype(jnp.bfloat16)
+    wv = jnp.swapaxes(wq.values, 0, 1).astype(jnp.bfloat16)
+    y = _gemm(xv, wv, cfg.accum_dtype).astype(x.dtype)
+    return y, (xv, wv, xq.mask, jnp.swapaxes(wq.mask, 0, 1), seed, sent_x, sent_w)
+
+
+def _quartet_bwd(cfg: QuartetConfig, res, dy):
+    if cfg.fwd_quantizer == "none":
+        x, w, seed = res
+        dyf = dy.astype(jnp.float32)
+        dx = _gemm(dyf, jnp.swapaxes(w, 0, 1).astype(jnp.float32), cfg.accum_dtype)
+        xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        gf = dyf.reshape(-1, dy.shape[-1])
+        dw = _gemm(jnp.swapaxes(xf, 0, 1), gf, cfg.accum_dtype)
+        return dx.astype(x.dtype), dw.astype(w.dtype), _float0_like(seed)
+
+    if cfg.use_kernels:
+        return _quartet_bwd_kernels(cfg, res, dy)
+
+    xq_v, wq_v, m_x, m_w, seed, sent_x, sent_w = res
+    x_dtype, w_dtype = sent_x.dtype, sent_w.dtype
+
+    K, N = wq_v.shape
+    dyf = dy.astype(jnp.float32)
+    lead = dy.shape[:-1]
+    Bflat = int(np.prod(lead)) if lead else 1
+
+    # ----- dx = H⁻¹( 16/9 · (SR(¾·Ĥ_N dy) @ SR(¾·Ĥ_N Wᵀ)ᵀ) ⊙ M_x ) ----------
+    # zero-pad N to a multiple of the Hadamard group (exact; see _pad32)
+    dy_p = _pad32(dyf, axis=-1)
+    wq_p = _pad32(wq_v, axis=-1)
+    Np = dy_p.shape[-1]
+    signs_n = fastrng.rademacher(seed, Np, salt=11)
+    g_h = _maybe_rht(dy_p, signs_n, cfg, axis=-1)  # [..., Np]
+    wt_h = _maybe_rht(wq_p.astype(jnp.float32), signs_n, cfg, axis=-1)
+    if cfg.bwd_rounding == "none":
+        dx_rot = _gemm(g_h, jnp.swapaxes(wt_h, 0, 1), cfg.accum_dtype)
+    else:
+        g_q = _bwd_quantize(g_h, cfg, seed, salt=1)
+        wt_q = _bwd_quantize(wt_h, cfg, seed, salt=2)  # blocks along N ✓
+        dx_rot = SR_POSTSCALE * _gemm(g_q, jnp.swapaxes(wt_q, 0, 1), cfg.accum_dtype)
+    dx = hadamard_transform(dx_rot * m_x, g=cfg.group, axis=-1)  # H⁻¹ = H
+
+    # ----- dW = H⁻¹( 16/9 · (SR(¾·Ĥ_B Xᵀ)ᵀ @ SR(¾·Ĥ_B dy)) ⊙ M_w ) ----------
+    xf = _pad32(xq_v.astype(jnp.float32).reshape(Bflat, K), axis=0)  # exact
+    gf = _pad32(dyf.reshape(Bflat, N), axis=0)
+    Bp = xf.shape[0]
+    if cfg.bwd_hadamard == "random":
+        signs_b = fastrng.rademacher(seed, Bp, salt=12)
+        x2 = randomized_hadamard_transform(xf, signs_b, g=cfg.group, axis=0)
+        g2 = randomized_hadamard_transform(gf, signs_b, g=cfg.group, axis=0)
+    elif cfg.bwd_hadamard == "fixed":
+        x2 = hadamard_transform(xf, g=cfg.group, axis=0)
+        g2 = hadamard_transform(gf, g=cfg.group, axis=0)
+    else:
+        x2, g2 = xf, gf
+    if cfg.bwd_rounding == "none":
+        dw_rot = _gemm(jnp.swapaxes(x2, 0, 1), g2, cfg.accum_dtype)
+    else:
+        x2_q = _bwd_quantize(jnp.swapaxes(x2, 0, 1), cfg, seed, salt=3)  # [K, B]
+        g2_q = _bwd_quantize(jnp.swapaxes(g2, 0, 1), cfg, seed, salt=4)  # [N, B]
+        dw_rot = SR_POSTSCALE * _gemm(x2_q, jnp.swapaxes(g2_q, 0, 1), cfg.accum_dtype)
+    dw = hadamard_transform(dw_rot * m_w, g=cfg.group, axis=0)  # H⁻¹ along K
+
+    return dx.astype(x_dtype), dw.astype(w_dtype), _float0_like(seed)
+
+
+def _dequant_codes(codes: jnp.ndarray, scales: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Half-codes + per-group scales → f32 values (code · 0.5 · scale)."""
+    shape = codes.shape
+    c = codes.astype(jnp.float32).reshape(*shape[:-1], shape[-1] // group, group)
+    return (c * (0.5 * scales)[..., None]).reshape(shape)
+
+
+def _quartet_bwd_kernels(cfg: QuartetConfig, res, dy):
+    """Algorithm 1 backward routed through the Pallas kernels."""
+    from repro.kernels import ops as K
+
+    (xc, xs), (wtc, wts), m_x, m_w, seed, sent_x, sent_w = res
+    g = cfg.group
+
+    wq_v = jnp.swapaxes(_dequant_codes(wtc, wts, g), 0, 1)  # [K, N]
+    Kdim, N = wq_v.shape
+    dyf = dy.astype(jnp.float32)
+    lead = dy.shape[:-1]
+    Bflat = int(np.prod(lead)) if lead else 1
+
+    # ----- dx ---------------------------------------------------------------
+    dy_p = _pad32(dyf, axis=-1)
+    wq_p = _pad32(wq_v, axis=-1)
+    Np = dy_p.shape[-1]
+    signs_n = fastrng.rademacher(seed, Np, salt=11)
+    gc, gs = K.sr_hadamard_quantize(dy_p, signs_n, seed, salt=1)  # [..., Np]
+    wtc2, wts2 = K.sr_hadamard_quantize(wq_p, signs_n, seed, salt=2)  # [K, Np]
+    dx_rot = SR_POSTSCALE * K.mxfp4_matmul(
+        gc, gs, jnp.swapaxes(wtc2, 0, 1), jnp.swapaxes(wts2, 0, 1)
+    )
+    dx = hadamard_transform(dx_rot * m_x, g=g, axis=-1)
+
+    # ----- dW ---------------------------------------------------------------
+    xq_v = _pad32(_dequant_codes(xc, xs, g).reshape(Bflat, Kdim), axis=0)
+    gf = _pad32(dyf.reshape(Bflat, N), axis=0)
+    Bp = xq_v.shape[0]
+    signs_b = fastrng.rademacher(seed, Bp, salt=12)
+    x2c, x2s = K.sr_hadamard_quantize(jnp.swapaxes(xq_v, 0, 1), signs_b, seed, salt=3)
+    g2c, g2s = K.sr_hadamard_quantize(jnp.swapaxes(gf, 0, 1), signs_b, seed, salt=4)
+    dw_rot = SR_POSTSCALE * K.mxfp4_matmul(
+        x2c, x2s, jnp.swapaxes(g2c, 0, 1), jnp.swapaxes(g2s, 0, 1)
+    )
+    dw = hadamard_transform(dw_rot * m_w, g=g, axis=0)
+
+    return (
+        dx.astype(sent_x.dtype).reshape(*lead, Kdim),
+        dw.astype(sent_w.dtype),
+        _float0_like(seed),
+    )
+
+
+quartet_linear.defvjp(_quartet_fwd, _quartet_bwd)
+
+
+# ---------------------------------------------------------------------------
+# FP4 all-gather (beyond-paper): ship FSDP weight shards as 4-bit codes
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quest_qdq_gathered(w: jnp.ndarray, cfg: QuartetConfig):
+    """H₃₂ → QuEST-quantize → (codes cross the FSDP all-gather as int8 +
+    per-32 scales, a 1.78× wire reduction vs bf16; 3.37× with int4 packing)
+    → dequantize.  Returns (w_rot_q values [K,N], mask [K,N]).
+
+    The grouped Hadamard and the per-32 scale blocks both live entirely
+    inside a K-shard (K/n_data is a multiple of 32 for every config), so the
+    quantization is shard-local and the gathered result is bit-identical to
+    quantizing the full tensor — the paper's forward, with a cheaper gather.
+    The STE/trust backward (g ⊙ M then H⁻¹) rides in the custom VJP.
+    """
+    out, _ = _qdqg_fwd(w, cfg)
+    return out
+
+
+def _qdqg_fwd(w, cfg: QuartetConfig):
+    """w: [K, N] or [E, K, N] (stacked experts; E stays model-sharded)."""
+    from repro.distributed.context import current_mesh
+
+    wh = hadamard_transform(w.astype(jnp.float32), g=cfg.group, axis=-2)
+    wq = Q.quest(jnp.swapaxes(wh, -2, -1), cfg.fwd_fmt)  # blocks along K
+    codes = jnp.swapaxes(wq.codes, -2, -1)  # int8 [..., K, N]
+    scales = jnp.swapaxes(wq.scales, -2, -1)  # f32 [..., K/32, N]
+    mask = jnp.swapaxes(wq.mask, -2, -1)
+
+    mesh = current_mesh()
+    if mesh is not None:
+        # force the all-gather to happen on the 4-bit payload (int8 codes +
+        # scales), not on dequantized bf16/f32 values
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def fits(dim):
+            return "model" if dim % mesh.shape["model"] == 0 else None
+
+        if w.ndim == 2:
+            spec = P(None, fits(w.shape[1]))
+        else:  # [E, K, N]: experts keep their EP sharding, K is gathered
+            spec = P(fits(w.shape[0]), None, None)
+        rep = NamedSharding(mesh, spec)
+        codes = jax.lax.with_sharding_constraint(codes, rep)
+        scales = jax.lax.with_sharding_constraint(scales, rep)
+
+    g = cfg.group
+    *lead, K, N = codes.shape
+    vals = (codes.astype(jnp.float32).reshape(*lead, K // g, g, N)
+            * (0.5 * scales)[..., None, :]).reshape(*lead, K, N)
+    vals = vals.astype(jnp.bfloat16)  # bf16-exact QDQ values
+    return (vals, mask), (mask, jnp.zeros((0,), w.dtype))
+
+
+def _qdqg_bwd(cfg: QuartetConfig, res, cts):
+    mask, sent_w = res
+    dvals, _ = cts  # cotangent w.r.t. the rotated-quantized values
+    # Reduce-scatter the cotangent to the weight's K-shard BEFORE touching the
+    # (shard-local) mask: otherwise GSPMD all-reduces the full f32 cotangent
+    # and gathers the bool mask — both the mask ⊙ and H are K-block-local, so
+    # they commute with the scatter.
+    from repro.distributed.context import current_mesh
+
+    mesh = current_mesh()
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        K = dvals.shape[-2]
+        fsdp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        size = 1
+        for a in fsdp:
+            size *= mesh.shape[a]
+        if K % size == 0:
+            spec = [None] * dvals.ndim
+            spec[-2] = fsdp
+            if dvals.ndim == 3 and dvals.shape[0] % mesh.shape["model"] == 0:
+                spec[0] = "model"  # stacked experts keep EP sharding
+            dvals = jax.lax.with_sharding_constraint(
+                dvals, NamedSharding(mesh, P(*spec)))
+    dw = hadamard_transform(dvals.astype(jnp.float32) * mask, g=cfg.group, axis=-2)
+    return (dw.astype(sent_w.dtype),)
+
+
+quest_qdq_gathered.defvjp(_qdqg_fwd, _qdqg_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def quartet_linear_pq(x, w_vals, w_mask, seed, cfg: QuartetConfig):
+    """quartet_linear with a pre-rotated/pre-quantized weight operand
+    (from quest_qdq_gathered).  x: [..., K]; w_vals/w_mask: [K, N]."""
+    y, _ = _pq_fwd(x, w_vals, w_mask, seed, cfg)
+    return y
+
+
+def _pq_fwd(x, w_vals, w_mask, seed, cfg: QuartetConfig):
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    xh = hadamard_transform(x.astype(jnp.float32), g=cfg.group, axis=-1)
+    xq = _fwd_quantize(xh, cfg, key)
+    xv = xq.values.astype(jnp.bfloat16)
+    y = _gemm(xv, w_vals.astype(jnp.bfloat16), cfg.accum_dtype).astype(x.dtype)
+    sent_x = jnp.zeros((0,), x.dtype)
+    return y, (xv, w_vals.astype(jnp.bfloat16), xq.mask, seed, sent_x)
+
+
+def _pq_bwd(cfg: QuartetConfig, res, dy):
+    """Algorithm-1 backward; dW is returned in the rotated-quantized space —
+    the mask ⊙ and H⁻¹ happen in quest_qdq_gathered's VJP."""
+    xq_v, wq_v, m_x, seed, sent_x = res
+    K, N = wq_v.shape
+    dyf = dy.astype(jnp.float32)
+    lead = dy.shape[:-1]
+    Bflat = int(np.prod(lead)) if lead else 1
+
+    dy_p = _pad32(dyf, axis=-1)
+    wq_p = _pad32(wq_v.astype(jnp.float32), axis=-1)
+    Np = dy_p.shape[-1]
+    signs_n = fastrng.rademacher(seed, Np, salt=11)
+    g_h = _maybe_rht(dy_p, signs_n, cfg, axis=-1)
+    wt_h = _maybe_rht(wq_p, signs_n, cfg, axis=-1)
+    g_q = _bwd_quantize(g_h, cfg, seed, salt=1)
+    wt_q = _bwd_quantize(wt_h, cfg, seed, salt=2)
+    dx_rot = SR_POSTSCALE * _gemm(g_q, jnp.swapaxes(wt_q, 0, 1), cfg.accum_dtype)
+    dx = hadamard_transform(dx_rot * m_x, g=cfg.group, axis=-1)
+
+    xf = _pad32(xq_v.astype(jnp.float32).reshape(Bflat, K), axis=0)
+    gf = _pad32(dyf.reshape(Bflat, N), axis=0)
+    Bp = xf.shape[0]
+    signs_b = fastrng.rademacher(seed, Bp, salt=12)
+    x2 = randomized_hadamard_transform(xf, signs_b, g=cfg.group, axis=0)
+    g2 = randomized_hadamard_transform(gf, signs_b, g=cfg.group, axis=0)
+    x2_q = _bwd_quantize(jnp.swapaxes(x2, 0, 1), cfg, seed, salt=3)
+    g2_q = _bwd_quantize(jnp.swapaxes(g2, 0, 1), cfg, seed, salt=4)
+    dw_rot = SR_POSTSCALE * _gemm(x2_q, jnp.swapaxes(g2_q, 0, 1), cfg.accum_dtype)
+
+    mask_ct = np.zeros(wq_v.shape, dtype=jax.dtypes.float0)  # bool operand
+    return (dx.astype(sent_x.dtype).reshape(*lead, K), dw_rot, mask_ct,
+            _float0_like(seed))
+
+
+quartet_linear_pq.defvjp(_pq_fwd, _pq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Reference forward (pure function, no custom vjp) for oracle tests
+# ---------------------------------------------------------------------------
+
+
+def quartet_forward_reference(x, w, cfg: QuartetConfig = QUARTET_CONFIG):
+    """The forward computation only — used by kernel ref tests and PTQ."""
+    xh = hadamard_transform(jnp.asarray(x, jnp.float32), g=cfg.group, axis=-1)
+    wh = hadamard_transform(jnp.asarray(w, jnp.float32), g=cfg.group, axis=0)
+    xq = Q.quest(xh, cfg.fwd_fmt)
+    wq = Q.quest(jnp.swapaxes(wh, 0, 1), cfg.fwd_fmt)
+    return _gemm(xq.values, jnp.swapaxes(wq.values, 0, 1), cfg.accum_dtype)

@@ -1,0 +1,8 @@
+"""Data pipeline: deterministic, checkpointable token streams."""
+
+from repro.data.pipeline import (  # noqa: F401
+    MemmapTokenDataset,
+    SyntheticC4Dataset,
+    TokenBatcher,
+    make_dataset,
+)

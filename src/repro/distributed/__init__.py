@@ -1,0 +1,9 @@
+"""Distribution: logical-axis sharding rules (DP/FSDP/TP/EP/SP) over the
+production mesh, built for GSPMD (jax.jit + NamedSharding)."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    batch_partition,
+    cache_partition,
+    param_partition,
+    partition_state,
+)

@@ -1,0 +1,119 @@
+"""Active-mesh context: launchers wrap lowering in ``activate_mesh(mesh)``;
+models anchor activations through ``constrain_*`` helpers that no-op when no
+mesh is active (CPU smoke tests), keeping model code mesh-agnostic."""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STACK: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Mesh):
+    _STACK.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _STACK.pop()
+
+
+def current_mesh() -> Mesh | None:
+    return _STACK[-1] if _STACK else None
+
+
+def _dp(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# §Perf knob: additionally shard the layer-scan carry's SEQUENCE dim over the
+# model axis (Megatron-style sequence parallelism).  Activations then regather
+# per layer (~MBs) instead of FSDP weights regathering per microbatch (~GBs) —
+# lets the microbatch count drop for gather-bound MoE training.
+SEQ_SHARD_CARRY = [False]
+
+
+def constrain_tokens(x):
+    """Anchor [B, S, ...] activations: batch → DP axes, falling back to
+    sequence → data for batch-1 long-context shapes (SP)."""
+    mesh = current_mesh()
+    if mesh is None or x.ndim < 2:
+        return x
+    B, S = x.shape[0], x.shape[1]
+    dp = _dp(mesh)
+    while dp and B % _size(mesh, dp) != 0:
+        dp = dp[:-1]
+    s_ax = None
+    if SEQ_SHARD_CARRY[0] and S > 1 and S % mesh.shape["model"] == 0:
+        s_ax = "model"
+    if dp and _size(mesh, dp) > 1:
+        spec = P(dp, s_ax, *([None] * (x.ndim - 2)))
+    elif S % mesh.shape["data"] == 0 and S > 1:
+        spec = P(None, "data", *([None] * (x.ndim - 2)))
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_params(tree):
+    """Anchor a param-structured pytree (e.g. the microbatch gradient
+    accumulator) to the parameter sharding rules — without this, GSPMD
+    replicates the f32 accumulator (≈1 TB/device for a 235B MoE)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+    from repro.distributed.sharding import param_partition
+
+    specs = param_partition(tree, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        tree, specs, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def constrain_layer_params(tree):
+    """Anchor a *per-layer* (unstacked) param slice inside the layer scan.
+
+    Forward this is a no-op (the slice already carries the right sharding);
+    the payoff is the transpose: with_sharding_constraint constrains its own
+    cotangent, so per-layer dW leaves the backward scan correctly sharded
+    instead of triggering SPMD's full-rematerialization reshard (a 141 GiB
+    replicated copy per expert tensor for the 235B MoE).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+    from repro.distributed.sharding import param_partition
+
+    specs = param_partition(tree, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        tree, specs, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def constrain_logits(x):
+    """[B, S, V]: batch → DP, vocab → model (anchors the LM-head GEMM)."""
+    mesh = current_mesh()
+    if mesh is None or x.ndim != 3:
+        return x
+    B, S, V = x.shape
+    dp = _dp(mesh)
+    while dp and B % _size(mesh, dp) != 0:
+        dp = dp[:-1]
+    b_ax = dp if (dp and _size(mesh, dp) > 1) else None
+    v_ax = "model" if V % mesh.shape["model"] == 0 else None
+    s_ax = None
+    if b_ax is None and S % mesh.shape["data"] == 0 and S > 1:
+        s_ax = "data"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(b_ax, s_ax, v_ax)))

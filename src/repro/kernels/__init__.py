@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for Quartet's two compute hot-spots (§4.4):
+
+  Stage 1 — fused quantization:  hadamard_quant (forward: fixed H + QuEST),
+            sr_hadamard_quant (backward: randomized H + stochastic rounding).
+  Stage 2 — block-scaled GEMM:   mxfp4_matmul (int8 half-codes + E8M0 scales,
+            per-tile VMEM dequant, fp32-accumulating MXU dot).
+
+Plus flash_attention — the serving-path attention hot-spot for the
+32k-prefill / long-decode shapes (online-softmax KV streaming, causal block
+skipping), oracle-tested like the rest.
+
+``ops.py`` holds the jit'd shape-flexible wrappers; ``ref.py`` the pure-jnp
+oracles each kernel is verified against (bit-exact) in interpret mode.
+"""
+
+from repro.kernels.flash_attention import flash_attention, mha_flash  # noqa: F401
+from repro.kernels.hadamard_quant import hadamard_quest_quantize  # noqa: F401
+from repro.kernels.mxfp4_matmul import mxfp4_matmul  # noqa: F401
+from repro.kernels.sr_hadamard_quant import sr_hadamard_quantize  # noqa: F401

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are *independent* implementations (built on repro.core's searchsorted-
+grid semantics) against which the arithmetic-trick kernel implementations are
+verified with assert_allclose over shape/dtype sweeps (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core import quantizers as Q
+from repro.core.hadamard import hadamard_transform
+
+
+def hadamard_quest_quantize_ref(x: jnp.ndarray, group: int = 32):
+    """Oracle for the fused forward Stage-1 kernel.
+
+    x: [M, K] → (codes int8 [M, K], scales f32 [M, K/group], mask bool [M, K])
+    codes are half-codes (2× the E2M1 grid value).
+    """
+    xh = hadamard_transform(jnp.asarray(x, jnp.float32), g=group, axis=-1)
+    r = Q.quest(xh, F.MXFP4)
+    return r.codes, r.scales, r.mask
+
+
+def sr_hadamard_quantize_ref(
+    x: jnp.ndarray, signs: jnp.ndarray, u: jnp.ndarray,
+    prescale: float = 0.75, group: int = 32,
+):
+    """Oracle for the fused backward Stage-1 kernel (randomized H + SR).
+
+    x: [M, K]; signs: [K] ±1; u: [M, K] uniforms.
+    Returns (codes int8 [M, K], scales f32 [M, K/group]).
+    """
+    xf = jnp.asarray(x, jnp.float32) * signs[None, :]
+    xh = hadamard_transform(xf, g=group, axis=-1) * prescale
+    fmt = F.MXFP4
+    xb = F.to_blocks(xh, group)
+    raw = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 2.0**F.E8M0_MIN_EXP) / fmt.max_value
+    scales = F.round_scale_e8m0(raw, "ceil")
+    q = F.stochastic_round_to_grid(
+        xb / scales[..., None], fmt.grid_array, F.to_blocks(u, group)
+    )
+    codes = F.from_blocks(jnp.round(q * 2.0).astype(jnp.int8))
+    return codes, scales
+
+
+def mxfp4_matmul_ref(a_codes, a_scales, b_codes, b_scales, group: int = 32):
+    """Oracle for the block-scaled GEMM kernel.
+
+    a: codes [M, K], scales [M, K/group]  (blocks along K)
+    b: codes [K, N], scales [K/group, N]  (blocks along K)
+    Returns f32 [M, N] with fp32 accumulation.
+    """
+    av = a_codes.astype(jnp.float32) * 0.5
+    av = av.reshape(av.shape[0], -1, group) * a_scales[..., None]
+    av = av.reshape(a_codes.shape)
+    bv = b_codes.astype(jnp.float32) * 0.5
+    bv = bv.reshape(-1, group, bv.shape[-1]) * b_scales[:, None, :]
+    bv = bv.reshape(b_codes.shape)
+    return jax.lax.dot_general(
+        av, bv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Naive-softmax oracle for the flash kernel.  q/k/v: [BH, S|T, hd]."""
+    import numpy as np
+
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

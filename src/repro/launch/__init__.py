@@ -1,0 +1,2 @@
+"""Launchers: production mesh construction, the multi-pod dry-run, the
+roofline analyzer, and the train/serve entry points."""

@@ -1,0 +1,235 @@
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × its shape set) cell this lowers + compiles the real
+step function (train_step for train shapes; serve prefill/decode otherwise)
+under the production meshes — 16×16 single-pod and 2×16×16 multi-pod — with
+512 placeholder host devices, printing memory_analysis() (fits) and feeding
+cost_analysis() + the HLO text into the roofline analyzer (§Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out reports/dryrun.json
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs, shapes_for  # noqa: E402
+from repro.distributed import sharding as SH  # noqa: E402
+from repro.distributed.context import activate_mesh  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim import adamw, adamw8bit, cosine_warmup  # noqa: E402
+from repro.train.serve import make_decode_step, make_prefill_step  # noqa: E402
+from repro.train.state import TrainState  # noqa: E402
+from repro.train.steps import make_train_step  # noqa: E402
+
+# archs whose fp32 Adam state cannot fit a single v5e pod: bf16 master +
+# int8 block-scaled moments (see DESIGN.md / optim.adamw8bit)
+BIG_MOE = {"qwen3-moe-235b-a22b", "arctic-480b"}
+
+
+def pick_microbatch(cfg, shape, n_dp: int) -> int:
+    """Gradient-accumulation factor for train shapes: targets ≈6 GB of
+    per-device saved-activation stacks (L·T·D·6 B, bf16+f32 copies).
+
+    mb may exceed global_batch/n_dp: when the per-microbatch batch no longer
+    shards over DP, activation sharding falls back to sequence parallelism
+    (distributed.context.constrain_tokens), so tokens/device keeps shrinking.
+    """
+    if shape.kind != "train":
+        return 1
+    import numpy as np
+
+    tokens_per_dev = shape.global_batch * shape.seq_len // n_dp
+    per_tok = max(cfg.num_layers * cfg.d_model * 6, 1)
+    t_target = max(6e9 / per_tok, 1024)
+    want = max(1, int(np.ceil(tokens_per_dev / t_target)))
+    mb = 1
+    while mb * 2 <= min(want, shape.global_batch) \
+            and shape.global_batch % (mb * 2) == 0:
+        mb *= 2
+    return mb
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_state(model, optimizer, master_dtype):
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(master_dtype))
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, params)
+    opt = jax.eval_shape(optimizer.init, params)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return TrainState(params, opt, step, None)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, compile_: bool = True,
+               fp4_allgather: bool = False, remat_policy: str = "none",
+               mb_override: int = 0):
+    """Lower + compile one (arch × shape × mesh) cell; return the report.
+
+    ``fp4_allgather`` / ``remat_policy`` are the §Perf hillclimb knobs (see
+    EXPERIMENTS.md §Perf) — defaults are the paper-faithful baseline."""
+    import dataclasses
+    cfg = get_config(arch)
+    if fp4_allgather:
+        cfg = dataclasses.replace(
+            cfg, quartet=dataclasses.replace(cfg.quartet, fp4_allgather=True))
+    if remat_policy != "none":
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    big = arch in BIG_MOE
+    optimizer = (adamw8bit if big else adamw)(cosine_warmup(3e-4, 10000))
+    master_dtype = "bfloat16" if big else "float32"
+
+    specs = input_specs(cfg, shape)
+    B = shape.global_batch
+    # decode inputs are [B, 1] — never sequence-shard them (SP applies to the
+    # KV/SSM cache, which cache_partition handles separately)
+    bspec = SH.batch_partition(
+        mesh, B, shape.seq_len if shape.kind != "decode" else None)
+    in_shard = {}
+    for k, s in specs.items():
+        if k in ("tokens", "labels"):
+            in_shard[k] = NamedSharding(mesh, bspec)
+        elif k == "position":
+            in_shard[k] = NamedSharding(mesh, P(bspec[0]))
+        else:  # stub embeddings [B, T, D]
+            in_shard[k] = NamedSharding(mesh, P(bspec[0], None, None))
+
+    n_dp = 512 // 16 if multi_pod else 16
+    mb = mb_override or pick_microbatch(cfg, shape, n_dp)
+    with activate_mesh(mesh):
+        if shape.kind == "train":
+            state = abstract_state(model, optimizer, master_dtype)
+            pspecs = SH.param_partition(state.params, mesh)
+            sspecs = SH.partition_state(state, pspecs, mesh)
+            step_fn = make_train_step(model, optimizer, microbatch=mb)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(_named(mesh, sspecs), in_shard),
+                out_shardings=(_named(mesh, sspecs), None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, specs)
+        else:
+            params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            pspecs = SH.param_partition(params, mesh)
+            cache = model.cache_spec(B, shape.seq_len)
+            cspecs = SH.cache_partition(cache, mesh, B)
+            if shape.kind == "prefill":
+                fn = make_prefill_step(model)
+                extra_keys = [k for k in specs if k not in ("tokens",)]
+                def run(params, tokens, caches, extra):
+                    return fn(params, tokens, caches, extra=extra or None)
+                extra = {k: specs[k] for k in extra_keys} or None
+                extra_shard = {k: in_shard[k] for k in extra_keys} or None
+                jitted = jax.jit(run, in_shardings=(
+                    _named(mesh, pspecs), in_shard["tokens"],
+                    _named(mesh, cspecs), extra_shard))
+                lowered = jitted.lower(params, specs["tokens"], cache, extra)
+            else:  # decode
+                fn = make_decode_step(model)
+                def run(params, token, position, caches):
+                    return fn(params, token, position, caches)
+                jitted = jax.jit(run, in_shardings=(
+                    _named(mesh, pspecs), in_shard["tokens"],
+                    in_shard["position"], _named(mesh, cspecs)),
+                    out_shardings=(None, _named(mesh, cspecs), None),
+                    donate_argnums=(3,))
+                lowered = jitted.lower(params, specs["tokens"],
+                                       specs["position"], cache)
+
+    t_lower = time.time() - t0
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "lower_s": round(t_lower, 2),
+        "microbatch": mb,
+    }
+    if not compile_:
+        return report, lowered, None
+    t0 = time.time()
+    compiled = lowered.compile()
+    report["compile_s"] = round(time.time() - t0, 2)
+
+    n_dev = 512 if multi_pod else 256
+    mf = RL.model_flops(cfg, shape, include_backward=(shape.kind == "train"))
+    analysis = RL.analyze_compiled(compiled, model_flops_per_step=mf,
+                                   n_devices=n_dev)
+    report.update(analysis)
+    ma = compiled.memory_analysis()
+    print(f"[{arch} × {shape_name} × {report['mesh']}] "
+          f"args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB/device "
+          f"| dominant={report['dominant']} "
+          f"compute={report['compute_s']*1e3:.2f}ms "
+          f"memory={report['memory_s']*1e3:.2f}ms "
+          f"collective={report['collective_s']*1e3:.2f}ms")
+    return report, lowered, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--fp4-allgather", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun.json")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_list = shapes_for(cfg) if (args.all or not args.shape) \
+            else [SHAPES[args.shape]]
+        for sh in shape_list:
+            for mp in meshes:
+                cells.append((arch, sh.name, mp))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    failures = 0
+    for arch, shape_name, mp in cells:
+        try:
+            report, _, _ = lower_cell(arch, shape_name, mp,
+                                      fp4_allgather=args.fp4_allgather)
+            report["status"] = "ok"
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            report = {"arch": arch, "shape": shape_name,
+                      "mesh": "2x16x16" if mp else "16x16",
+                      "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        results.append(report)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+    print(f"\n{len(results) - failures}/{len(results)} cells OK -> {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod = 16×16 = 256 chips (v5e pod);
+multi-pod = 2×16×16 = 512 chips with a leading "pod" axis (DCI-connected).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model: int = 1):
+    """Smoke-test mesh over whatever devices exist (usually 1 CPU device)."""
+    n = len(jax.devices())
+    data = max(n // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,274 @@
+"""Roofline analysis from compiled HLO (§Roofline of EXPERIMENTS.md).
+
+``compiled.cost_analysis()`` does NOT multiply ``lax.scan``/while bodies by
+their trip count (verified empirically — a 94-layer scan reports 1 layer of
+FLOPs), so this module parses ``compiled.as_text()`` directly:
+
+  1. split the module into computations, building a per-computation symbol
+     table (op name → output shape) including parameters,
+  2. cost each op: dot/convolution FLOPs from operand/output shapes,
+     collective bytes by kind (all-gather/all-reduce/reduce-scatter/
+     all-to-all/collective-permute), HBM-traffic proxy = Σ output bytes of
+     non-trivial ops,
+  3. walk the call graph from ENTRY multiplying by each while op's
+     ``known_trip_count`` (fusions/calls ×1, conditional branches ×1),
+  4. emit the three roofline terms with the v5e constants.
+
+The SPMD-partitioned module is already per-device, so all numbers are
+per-chip.  The memory term is a *proxy* (fusion-boundary traffic on the CPU
+backend differs from TPU); it is used for relative §Perf iteration deltas
+alongside the analytic weights+activations estimate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link (3D-torus links not aggregated: conservative)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e8m0fnu": 1,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f4e2m1fn": 0.5, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_TRIVIAL_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy", "after-all", "partition-id", "replica-id", "iota", "bitcast-convert",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (sums tuple components)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    calls: list = dataclasses.field(default_factory=list)  # (comp_name, count)
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\]))")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_hlo(text: str) -> tuple[dict[str, CompCost], str]:
+    """Returns ({computation: CompCost}, entry_name)."""
+    comps: dict[str, CompCost] = {}
+    entry = None
+    cur: CompCost | None = None
+    cur_name = None
+    symbols: dict[str, str] = {}
+
+    for line in text.splitlines():
+        # computation headers are column-0 lines ending with "{"
+        is_hdr_line = line and not line[0].isspace() and line.rstrip().endswith("{") \
+            and not line.startswith("HloModule")
+        if is_hdr_line:
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr is None:  # fallback: extract the name only
+                m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(", line.strip())
+                if m is None:
+                    continue
+                groups = (m.group(1), m.group(2), "", "")
+            else:
+                groups = hdr.groups()
+            cur_name = groups[1]
+            cur = CompCost()
+            comps[cur_name] = cur
+            symbols = {}
+            if groups[0]:
+                entry = cur_name
+            for pname, ptype in _PARAM_RE.findall(line):
+                symbols[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        name, out_type, op, rest = m.groups()
+        symbols[name] = out_type
+
+        if op in _TRIVIAL_OPS:
+            continue
+
+        out_bytes = _shape_bytes(out_type)
+
+        if op == "while":
+            trip = 1
+            tm = _TRIP_RE.search(s)
+            if tm:
+                trip = int(tm.group(1))
+            bm, cm = _BODY_RE.search(s), _COND_RE.search(s)
+            if bm:
+                cur.calls.append((bm.group(1), trip))
+            if cm:
+                cur.calls.append((cm.group(1), trip + 1))
+            continue
+        if op == "conditional":
+            br = _BRANCHES_RE.search(s)
+            if br:
+                for b in _OPERAND_RE.findall(br.group(1)):
+                    cur.calls.append((b, 1))
+            continue
+        if op in ("fusion", "call", "async-start", "map", "reduce", "sort",
+                  "reduce-window", "scatter", "select-and-scatter", "custom-call"):
+            cm2 = _CALLS_RE.search(s)
+            if cm2:
+                cur.calls.append((cm2.group(1), 1))
+            cur.mem_bytes += out_bytes
+            # fall through: reduces etc. count their output traffic
+
+        if op in _COLLECTIVES:
+            # bytes moved ≈ max(input, output) payload of the collective
+            opnds = _OPERAND_RE.findall(rest.split(",  ")[0])
+            in_bytes = sum(_shape_bytes(symbols.get(o, "")) for o in opnds
+                           if o in symbols)
+            cur.coll_bytes[op] += max(out_bytes, in_bytes)
+            continue
+
+        if op in ("dot", "convolution"):
+            opnds = _OPERAND_RE.findall(rest)
+            lhs = symbols.get(opnds[0], "") if opnds else ""
+            lhs_dims = _shape_dims(lhs)
+            out_dims = _shape_dims(out_type)
+            contract = 1
+            cmatch = _CONTRACT_RE.search(s)
+            if cmatch and lhs_dims:
+                for ci in (cmatch.group(1).split(",") if cmatch.group(1) else []):
+                    contract *= lhs_dims[int(ci)]
+            n_out = 1
+            for d in out_dims:
+                n_out *= d
+            cur.flops += 2.0 * n_out * max(contract, 1)
+            cur.mem_bytes += out_bytes
+            continue
+
+        if op not in ("fusion", "call"):
+            cur.mem_bytes += out_bytes
+
+    return comps, entry or "main"
+
+
+def aggregate(comps: dict[str, CompCost], entry: str) -> dict:
+    """Walk the call graph multiplying by call counts."""
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] += m
+        for callee, count in comps[name].calls:
+            visit(callee, m * count, depth + 1)
+
+    visit(entry, 1.0)
+
+    flops = sum(comps[c].flops * m for c, m in mult.items() if c in comps)
+    mem = sum(comps[c].mem_bytes * m for c, m in mult.items() if c in comps)
+    coll = defaultdict(float)
+    for c, m in mult.items():
+        if c in comps:
+            for kind, b in comps[c].coll_bytes.items():
+                coll[kind] += b * m
+    return {"flops": flops, "mem_bytes": mem, "collective_bytes": dict(coll),
+            "total_collective_bytes": sum(coll.values())}
+
+
+def roofline_terms(agg: dict) -> dict:
+    """The three §Roofline terms, in seconds (per device, per step)."""
+    compute = agg["flops"] / PEAK_FLOPS_BF16
+    memory = agg["mem_bytes"] / HBM_BW
+    collective = agg["total_collective_bytes"] / ICI_BW
+    dominant = max(
+        (("compute", compute), ("memory", memory), ("collective", collective)),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+    }
+
+
+def analyze_compiled(compiled, model_flops_per_step: float | None = None,
+                     n_devices: int = 256) -> dict:
+    """Full analysis of a compiled executable."""
+    comps, entry = parse_hlo(compiled.as_text())
+    agg = aggregate(comps, entry)
+    out = {**agg, **roofline_terms(agg)}
+    ca = compiled.cost_analysis() or {}
+    out["xla_cost_flops_unscaled"] = ca.get("flops", 0.0)
+    ma = compiled.memory_analysis()
+    out["bytes_per_device"] = {
+        "arguments": getattr(ma, "argument_size_in_bytes", 0),
+        "outputs": getattr(ma, "output_size_in_bytes", 0),
+        "temp": getattr(ma, "temp_size_in_bytes", 0),
+        "alias": getattr(ma, "alias_size_in_bytes", 0),
+    }
+    if model_flops_per_step:
+        total_hlo = agg["flops"] * n_devices
+        out["model_flops"] = model_flops_per_step
+        out["useful_fraction"] = model_flops_per_step / max(total_hlo, 1.0)
+    return out
+
+
+def model_flops(cfg, shape, include_backward: bool) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (train) or 2·N·D (forward), N = active."""
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_tok = 6 * n if include_backward else 2 * n
+    return float(per_tok) * tokens
+
+
+def save_report(path: str, report: dict):
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, default=str)

@@ -1,0 +1,69 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real multi-host TPU fleet this process runs per host (jax.distributed
+initializes from the cluster env); in this container it runs single-process
+on CPU with reduced configs.  Restart the same command after a failure and it
+resumes from the latest atomic checkpoint.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_reduced_config
+from repro.configs.llama_paper import LEARNING_RATES
+from repro.data.pipeline import TokenBatcher, make_dataset
+from repro.distributed.context import activate_mesh
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import build_model
+from repro.optim import adamw, adamw8bit, cosine_warmup
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU)")
+    ap.add_argument("--method", default="quartet",
+                    help="quartet | bf16 | luq_int4 | jetfire_fp4 | halo_fp4 | lss_int4")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--data", default="synthetic")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--opt8bit", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 production mesh (requires devices)")
+    args = ap.parse_args()
+
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    model = build_model(cfg)
+    lr = args.lr or LEARNING_RATES.get(args.arch, 3e-4)
+    opt = (adamw8bit if args.opt8bit else adamw)(
+        cosine_warmup(lr, args.steps))
+    ds = make_dataset(args.data, cfg.vocab_size)
+    batcher = TokenBatcher(ds, args.batch, args.seq,
+                           host_index=jax.process_index(),
+                           host_count=jax.process_count())
+
+    mesh = (make_production_mesh() if args.production_mesh else make_local_mesh())
+    with activate_mesh(mesh):
+        state, history = train(
+            model, opt, batcher, args.steps, method=args.method,
+            master_dtype="bfloat16" if args.opt8bit else "float32",
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            grad_compress=args.grad_compress, microbatch=args.microbatch)
+    print(f"final loss: {history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: functional JAX implementations (params are plain pytrees) of
+dense / MoE / SSM / hybrid / enc-dec / VLM transformer backbones, with every
+linear layer routed through Quartet (or a selectable baseline scheme)."""
+
+from repro.models.registry import build_model  # noqa: F401

@@ -1,0 +1,173 @@
+"""GQA attention with flash-style chunked computation.
+
+The S×S score matrix is never materialized: an online-softmax ``lax.scan``
+over KV chunks keeps the live transient at [B, S, H, kv_chunk] — this is what
+makes the 32k-prefill and 500k-decode shapes lowerable, and it maps directly
+onto a Pallas flash kernel on hardware (same blocking).
+
+All four projections (QKV + output) go through the Quartet linear.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype, d_kv_source: int | None = None):
+    d, hd = cfg.d_model, cfg.head_dim_
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dsrc = d_kv_source or d
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": L.init_dense(ks[0], d, nq * hd, dtype, cfg.use_bias),
+        "wk": L.init_dense(ks[1], dsrc, nkv * hd, dtype, cfg.use_bias),
+        "wv": L.init_dense(ks[2], dsrc, nkv * hd, dtype, cfg.use_bias),
+        "wo": L.init_dense(ks[3], nq * hd, d, dtype, cfg.use_bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, dtype)
+        p["k_norm"] = L.init_rmsnorm(hd, dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def blocked_attention(
+    q: jnp.ndarray,  # [B, S, Hq, hd]
+    k: jnp.ndarray,  # [B, T, Hkv, hd]
+    v: jnp.ndarray,  # [B, T, Hkv, hd]
+    q_positions: jnp.ndarray,  # [B, S] absolute positions
+    causal: bool,
+    kv_chunk: int,
+) -> jnp.ndarray:
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    # pad T up to a chunk multiple instead of shrinking the chunk: a 1500-
+    # frame encoder would otherwise degrade to ck=4 → a 375-step scan whose
+    # saved backward carries cost ~14 GB/device.  Padded keys are masked.
+    T_orig = T
+    ck = min(kv_chunk, T)
+    pad_t = (-T) % ck
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        T = T + pad_t
+    nck = T // ck
+    need_pad_mask = pad_t > 0
+
+    # For S > 1 (train/prefill) every batch row uses the same arange
+    # positions; building the mask per-row would materialize a [B,S,ck] pred
+    # that XLA hoists out of the layer scan as a multi-GB loop invariant.
+    # Row-shared masks are [S, ck] — 1000× smaller.  Decode (S == 1) has
+    # genuinely per-row positions but the mask is tiny.
+    shared_rows = S > 1
+    mpos = q_positions[:1] if shared_rows else q_positions  # [1|B, S]
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, group, hd)
+    # keep the KV stream in its storage dtype; casting the WHOLE cache to f32
+    # up-front would materialize 2× the cache (16 GB for a 32k MHA decode) —
+    # each chunk is cast in VMEM-sized pieces inside the scan body
+    kc = k.reshape(B, nck, ck, Hkv, hd)
+    vc = v.reshape(B, nck, ck, Hkv, hd)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp  # kj/vj: [B, ck, Hkv, hd]
+        kj = kj.astype(jnp.float32)
+        vj = vj.astype(jnp.float32)
+        s = jnp.einsum("bskgd,bckd->bskgc", qf, kj,
+                       preferred_element_type=jnp.float32)  # k=Hkv, g=group
+        kv_pos = j * ck + jnp.arange(ck)
+        if causal:
+            mask = mpos[:, :, None, None, None] >= kv_pos[None, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        elif need_pad_mask:
+            s = jnp.where(kv_pos[None, None, None, None, :] < T_orig, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgc,bckd->bskgd", p, vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, Hkv, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, group), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, group, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.arange(nck), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def attention(
+    params,
+    x: jnp.ndarray,  # [B, S, D]
+    positions: jnp.ndarray,  # [B, S]
+    seed: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    kv_source: jnp.ndarray | None = None,  # cross-attention source
+    kv_cache: tuple[jnp.ndarray, jnp.ndarray] | None = None,  # (k,v) [B,T,Hkv,hd]
+    cache_index: jnp.ndarray | None = None,  # [B] write position for decode
+    write_kv: bool = False,  # (re)build a full KV cache from kv_source (prefill)
+    method: str = "quartet",
+):
+    """Returns (out [B,S,D], new_kv_cache | None)."""
+    hd, nq, nkv = cfg.head_dim_, cfg.num_heads, cfg.num_kv_heads
+    qc = cfg.quartet
+
+    q = _split_heads(L.dense(params["wq"], x, L.seed_fold(seed, 1), qc, method), nq, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    if cfg.pos_embed == "rope" and kv_source is None:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and cache_index is None and not write_kv:
+        # reuse fully-precomputed KV (e.g. cached cross-attention memory)
+        k, v = kv_cache
+        new_cache = kv_cache
+    else:
+        src = kv_source if kv_source is not None else x
+        k = _split_heads(L.dense(params["wk"], src, L.seed_fold(seed, 2), qc, method), nkv, hd)
+        v = _split_heads(L.dense(params["wv"], src, L.seed_fold(seed, 3), qc, method), nkv, hd)
+        if cfg.qk_norm:
+            k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+        if cfg.pos_embed == "rope" and kv_source is None:
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        if write_kv:  # build a full cache from kv_source (cross-attn prefill)
+            new_cache = (k, v)
+        elif kv_cache is not None:  # decode/prefill: insert S new entries at index
+            ck_, cv_ = kv_cache
+            upd = lambda c, n: jax.vmap(
+                lambda cb, nb, i: jax.lax.dynamic_update_slice(cb, nb, (i, 0, 0))
+            )(c, n.astype(c.dtype), cache_index)
+            ck_, cv_ = upd(ck_, k), upd(cv_, v)
+            k, v = ck_, cv_
+            new_cache = (ck_, cv_)
+
+    # note: a causal mask on q_positions subsumes the cache-validity mask
+    # (queries at position p never look past p), so no kv_valid is needed
+    out = blocked_attention(
+        q, k, v, positions, causal=causal and kv_source is None,
+        kv_chunk=cfg.attn_kv_chunk,
+    )
+    out = out.reshape(*x.shape[:-1], nq * hd)
+    out = L.dense(params["wo"], out, L.seed_fold(seed, 4), qc, method)
+    return out, new_cache

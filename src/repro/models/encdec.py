@@ -1,0 +1,157 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a stub per spec: ``source_embeds`` arrive as
+precomputed frame embeddings [B, T_src, D].  Encoder = bidirectional self-attn
+blocks; decoder = causal self-attn + cross-attn + MLP.  Whisper uses
+LayerNorm and absolute (sinusoidal) positions — both selected via the config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import (
+    constrain_layer_params,
+    constrain_logits,
+    constrain_tokens,
+)
+from repro.models import layers as L
+from repro.models.attention import attention, init_attention
+from repro.models.transformer import (
+    LAYER_SEED_STRIDE,
+    dense_cache_spec,
+    init_dense_block,
+    init_mlp,
+    mlp,
+    stacked_init,
+)
+
+
+def init_encdec_lm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_enc, k_dec, k_emb = jax.random.split(key, 3)
+    init_norm, _ = L.make_norm(cfg.norm)
+
+    def init_dec_block(k, cfg, dtype):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "self_norm": init_norm(cfg.d_model, dtype),
+            "self_attn": init_attention(k1, cfg, dtype),
+            "cross_norm": init_norm(cfg.d_model, dtype),
+            "cross_attn": init_attention(k2, cfg, dtype),
+            "mlp_norm": init_norm(cfg.d_model, dtype),
+            "mlp": init_mlp(k3, cfg, dtype),
+        }
+
+    return {
+        "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "encoder": {
+            "layers": stacked_init(init_dense_block, k_enc, cfg.encoder_layers, cfg, dtype),
+            "final_norm": init_norm(cfg.d_model, dtype),
+        },
+        "decoder": {
+            "layers": stacked_init(init_dec_block, k_dec, cfg.num_layers, cfg, dtype),
+            "final_norm": init_norm(cfg.d_model, dtype),
+        },
+    }
+
+
+def encode(params, source_embeds, cfg: ModelConfig, seed, method="quartet"):
+    """source_embeds: [B, T_src, D] → memory [B, T_src, D]."""
+    _, norm = L.make_norm(cfg.norm)
+    B, T, _ = source_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    pe = L.sinusoidal_positions(T, cfg.d_model)
+    x = source_embeds + pe[None].astype(source_embeds.dtype)
+
+    def body(x, inp):
+        lp, i = inp
+        lp = constrain_layer_params(lp)
+        s = (seed + i.astype(jnp.uint32) * jnp.uint32(LAYER_SEED_STRIDE)).astype(jnp.uint32)
+        h, _ = attention(lp["attn"], norm(lp["attn_norm"], x, cfg.norm_eps), pos,
+                         L.seed_fold(s, 100), cfg, causal=False, method=method)
+        x = x + h
+        x = x + mlp(lp["mlp"], norm(lp["mlp_norm"], x, cfg.norm_eps),
+                    L.seed_fold(s, 200), cfg, method)
+        return constrain_tokens(x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["encoder"]["layers"],
+                                  jnp.arange(cfg.encoder_layers, dtype=jnp.uint32)))
+    return norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def encdec_forward(params, tokens, cfg: ModelConfig, seed, *, positions=None,
+                   memory=None, source_embeds=None, caches=None, cache_index=None,
+                   build_cross=False, method="quartet", extra=None,
+                   features_only=False):
+    """Decoder forward (teacher-forced or incremental).
+
+    caches: {"self": (k, v) stacked [L, ...], "cross": (k, v) stacked} or None.
+    """
+    _, norm = L.make_norm(cfg.norm)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if memory is None and (caches is None or build_cross):
+        # training / prefill need the encoder; cached decode reuses cross-KV
+        assert source_embeds is not None, "need memory or source_embeds"
+        memory = encode(params, source_embeds, cfg, L.seed_fold(seed, 7), method)
+
+    pe = L.sinusoidal_positions(max(4096, S), cfg.d_model)
+    x = L.embed(params["embed"], tokens)
+    x = x + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1), axis=0).astype(x.dtype)
+
+    self_caches = caches["self"] if caches is not None else None
+    cross_caches = caches["cross"] if caches is not None else None
+
+    def body(x, inp):
+        lp, i, sc, cc = inp
+        lp = constrain_layer_params(lp)
+        s = (seed + i.astype(jnp.uint32) * jnp.uint32(LAYER_SEED_STRIDE)).astype(jnp.uint32)
+        h, new_sc = attention(lp["self_attn"], norm(lp["self_norm"], x, cfg.norm_eps),
+                              positions, L.seed_fold(s, 100), cfg, causal=True,
+                              kv_cache=sc, cache_index=cache_index, method=method)
+        x = x + h
+        h, new_cc = attention(lp["cross_attn"], norm(lp["cross_norm"], x, cfg.norm_eps),
+                              positions, L.seed_fold(s, 150), cfg, causal=False,
+                              kv_source=memory, kv_cache=cc, write_kv=build_cross,
+                              method=method)
+        x = x + h
+        x = x + mlp(lp["mlp"], norm(lp["mlp_norm"], x, cfg.norm_eps),
+                    L.seed_fold(s, 200), cfg, method)
+        return constrain_tokens(x), (new_sc, new_cc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (new_self, new_cross) = jax.lax.scan(
+        body, x, (params["decoder"]["layers"],
+                  jnp.arange(cfg.num_layers, dtype=jnp.uint32), self_caches, cross_caches))
+
+    if features_only:
+        logits = x
+    else:
+        x = norm(params["decoder"]["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, L.seed_fold(seed, 999), cfg.quartet,
+                           cfg.quantize_lm_head, method)
+        logits = constrain_logits(logits.astype(jnp.float32))
+    new_caches = None
+    if caches is not None:
+        new_caches = {"self": new_self, "cross": new_cross}
+    return logits, new_caches, jnp.float32(0.0)
+
+
+def encdec_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    stack = lambda spec: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.num_layers, *s.shape), s.dtype), spec)
+    hd = cfg.head_dim_
+    cross = (
+        jax.ShapeDtypeStruct((batch, cfg.max_source_len, cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+        jax.ShapeDtypeStruct((batch, cfg.max_source_len, cfg.num_kv_heads, hd), jnp.dtype(cfg.dtype)),
+    )
+    return {"self": stack(dense_cache_spec(cfg, batch, max_len)), "cross": stack(cross)}

@@ -1,0 +1,138 @@
+"""Zamba2-style hybrid: a stack of Mamba2 blocks with a *shared* attention
+block (one parameter set, reused) applied every ``attn_every`` layers.
+
+Structure (L = 81, attn_every = 6): 13 super-blocks of [shared-attn →
+6 × mamba2] followed by a 3-layer mamba2 tail.  The shared block's weights
+are closure constants of the super-block scan; its 13 applications have
+*distinct* KV caches (weights shared, state not).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import (
+    constrain_layer_params,
+    constrain_logits,
+    constrain_tokens,
+)
+from repro.models import layers as L
+from repro.models.ssm import init_mamba2_block, mamba2_block, mamba2_cache_spec
+from repro.models.transformer import (
+    LAYER_SEED_STRIDE,
+    dense_block,
+    dense_cache_spec,
+    init_dense_block,
+    stacked_init,
+)
+
+
+def _split_counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    n_super = cfg.num_layers // cfg.attn_every
+    tail = cfg.num_layers - n_super * cfg.attn_every
+    return n_super, cfg.attn_every, tail
+
+
+def init_hybrid_lm(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k_emb, k_m, k_a, k_head = jax.random.split(key, 4)
+    params = {
+        "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba_layers": stacked_init(init_mamba2_block, k_m, cfg.num_layers, cfg, dtype),
+        "shared_attn": init_dense_block(k_a, cfg, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def _take(tree, sl):
+    return jax.tree.map(lambda x: x[sl], tree)
+
+
+def hybrid_forward(params, tokens, cfg: ModelConfig, seed, *, positions=None,
+                   caches=None, cache_index=None, method="quartet", extra=None,
+                   features_only=False):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    x = constrain_tokens(L.embed(params["embed"], tokens))
+
+    n_super, per, tail = _split_counts(cfg)
+    main = _take(params["mamba_layers"], slice(0, n_super * per))
+    main = jax.tree.map(lambda a: a.reshape(n_super, per, *a.shape[1:]), main)
+    tail_p = _take(params["mamba_layers"], slice(n_super * per, cfg.num_layers))
+
+    attn_caches = caches["attn"] if caches is not None else None
+    m_caches = caches["mamba"] if caches is not None else None
+    if m_caches is not None:
+        m_main = jax.tree.map(lambda a: a.reshape(n_super, per, *a.shape[1:]),
+                              _take(m_caches, slice(0, n_super * per)))
+        m_tail = _take(m_caches, slice(n_super * per, cfg.num_layers))
+    else:
+        m_main = m_tail = None
+
+    shared = params["shared_attn"]
+
+    def mamba_scan(x, group_params, group_caches, seed0):
+        def body(carry, inp):
+            x = carry
+            lp, i, c = inp
+            lp = constrain_layer_params(lp)
+            s = (seed0 + i.astype(jnp.uint32) * jnp.uint32(LAYER_SEED_STRIDE)).astype(jnp.uint32)
+            x, nc, _ = mamba2_block(lp, x, positions, s, cfg, c, cache_index, method)
+            return constrain_tokens(x), nc
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        n = jax.tree.leaves(group_params)[0].shape[0]
+        return jax.lax.scan(body, x, (group_params, jnp.arange(n, dtype=jnp.uint32), group_caches))
+
+    def super_body(carry, inp):
+        x = carry
+        sp_idx, m_params, m_cache, a_cache = inp
+        s_attn = (seed + sp_idx.astype(jnp.uint32) * jnp.uint32(7919)).astype(jnp.uint32)
+        x, new_a_cache, _ = dense_block(shared, x, positions, s_attn, cfg,
+                                        a_cache, cache_index, method)
+        seed0 = (seed + sp_idx.astype(jnp.uint32)
+                 * jnp.uint32((per * LAYER_SEED_STRIDE) % (2**32))).astype(jnp.uint32)
+        x, new_m_cache = mamba_scan(x, m_params, m_cache, seed0)
+        return x, (new_m_cache, new_a_cache)
+
+    if cfg.remat:  # hierarchical remat (see vlm.py): the shared-attention
+        # block otherwise saves its intermediates per super application
+        super_body = jax.checkpoint(super_body, prevent_cse=False)
+    x, (new_m_main, new_attn) = jax.lax.scan(
+        super_body, x,
+        (jnp.arange(n_super, dtype=jnp.uint32), main, m_main, attn_caches),
+    )
+    new_m_tail = None
+    if tail:
+        x, new_m_tail = mamba_scan(x, tail_p, m_tail, L.seed_fold(seed, 4242))
+
+    from repro.models.transformer import lm_head_apply
+    logits = x if features_only else lm_head_apply(params, x, cfg, seed, method)
+
+    new_caches = None
+    if caches is not None:
+        if tail:
+            new_m = jax.tree.map(
+                lambda a, b: jnp.concatenate([a.reshape(-1, *a.shape[2:]), b], axis=0),
+                new_m_main, new_m_tail)
+        else:
+            new_m = jax.tree.map(lambda a: a.reshape(-1, *a.shape[2:]), new_m_main)
+        new_caches = {"attn": new_attn, "mamba": new_m}
+    return logits, new_caches, jnp.float32(0.0)
+
+
+def hybrid_cache_spec(cfg: ModelConfig, batch: int, max_len: int):
+    n_super, _, _ = _split_counts(cfg)
+    attn = dense_cache_spec(cfg, batch, max_len)
+    stack = lambda spec, n: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), spec)
+    return {
+        "attn": stack(attn, n_super),
+        "mamba": stack(mamba2_cache_spec(cfg, batch), cfg.num_layers),
+    }

@@ -1,0 +1,155 @@
+"""Shared layers: norms, Quartet-wired dense, embeddings, RoPE.
+
+Functional style: ``init_*`` returns a param pytree; ``apply`` functions take
+(params, inputs).  No framework dependency — params are dicts of jnp arrays,
+so sharding rules can address them by path (distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quartet import QuartetConfig, quartet_linear
+from repro.core.baselines import baseline_linear
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -3.0, 3.0, shape)).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, use_bias: bool = False, std: float | None = None):
+    std = std if std is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": trunc_normal(key, (d_in, d_out), std, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x, seed, qcfg: QuartetConfig, method: str = "quartet"):
+    """Quantized linear: the single entry point every model matmul goes
+    through.  ``method`` selects Quartet vs a baseline training scheme."""
+    w = params["w"]
+    if w.shape[0] % 32 != 0:
+        # contraction dim below / not divisible by the MXFP4 group: such GEMMs
+        # (e.g. mamba dt_proj at tiny smoke scale) are negligible — keep bf16
+        method = "bf16"
+    if method == "quartet" and qcfg.fp4_allgather and w.ndim == 2:
+        from repro.core.quartet import quartet_linear_pq, quest_qdq_gathered
+
+        w_vals, w_mask = quest_qdq_gathered(w, qcfg)
+        y = quartet_linear_pq(x, w_vals, w_mask, seed, qcfg)
+    elif method == "quartet":
+        y = quartet_linear(x, w, seed, qcfg)
+    elif method == "bf16":
+        y = jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+    else:
+        y = baseline_linear(x, w, seed, method)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    return (init_rmsnorm, rmsnorm) if kind == "rmsnorm" else (init_layernorm, layernorm)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute token positions)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    # train/prefill positions are row-identical arange: computing cos/sin per
+    # row materializes a [B,S,hd] f32 loop invariant — share across rows and
+    # let broadcasting fuse it.  Decode (S == 1) keeps per-row positions.
+    if x.shape[1] > 1:
+        positions = positions[:1]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [1|B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jnp.ndarray:
+    pos = np.arange(max_len)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((max_len, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    # 1/√d keeps tied-unembedding logits O(1) at init
+    return {"table": trunc_normal(key, (vocab, d), 1.0 / np.sqrt(d), dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, seed, qcfg: QuartetConfig, quantize: bool, method: str = "quartet"):
+    """Logits head.  Tied path multiplies by the embedding table transpose."""
+    table = params["table"]
+    if quantize and method == "quartet":
+        return quartet_linear(x, jnp.swapaxes(table, 0, 1), seed, qcfg)
+    return jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def seed_fold(seed: jnp.ndarray, salt: int) -> jnp.ndarray:
+    """Cheap deterministic per-site seed derivation (uint32 arithmetic)."""
+    return (seed * jnp.uint32(1000003) + jnp.uint32(salt)).astype(jnp.uint32)

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts block (qwen3-moe, arctic) with Quartet expert GEMMs.
+
+Routing is GShard-style grouped capacity-based dispatch, formulated as pure
+gather/scatter + einsum so GSPMD can shard it (no shard_map):
+
+  tokens  [G, g, D]   groups G sharded over the DP axes, g tokens per group
+  gates   [G, g, E]   dense top-k-masked router weights
+  select  [G, E, c]   per (group, expert) the top-c token indices (capacity)
+  expert  [G, E, c, D] → FFN (vmapped Quartet linears, experts over "model")
+  combine scatter-add back to [G, g, D] (→ all-reduce over the expert axis)
+
+Capacity c = round_up(k·g/E·capacity_factor, 32); tokens over capacity are
+dropped (their gate contribution is zero), matching GShard/Switch semantics.
+The router itself stays in bf16 — it is a tiny GEMM and accuracy-critical,
+mirroring the paper's policy of keeping non-GEMM-dominant ops high precision.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.attention import attention, init_attention
+from repro.models.transformer import init_mlp, mlp
+
+NEG_INF = -1e30
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(np.ceil(cfg.experts_per_token * tokens_per_group / cfg.num_experts
+                    * cfg.capacity_factor))
+    return max(32, ((c + 31) // 32) * 32)
+
+
+def init_moe_ffn(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "router": L.init_dense(ks[0], d, e, dtype),
+        "gate": L.trunc_normal(ks[1], (e, d, f), std, dtype),
+        "up": L.trunc_normal(ks[2], (e, d, f), std, dtype),
+        "down": L.trunc_normal(ks[3], (e, f, d), 1.0 / np.sqrt(f), dtype),
+    }
+    if cfg.moe_dense_residual:
+        p["dense_mlp"] = init_mlp(ks[4], cfg, dtype)
+    return p
+
+
+def _expert_ffn(xe, params, seed, cfg: ModelConfig, method: str):
+    """xe: [E, T', D] → [E, T', D]; per-expert Quartet linears via vmap."""
+    qc = cfg.quartet
+    seeds = L.seed_fold(seed, 20) + jnp.arange(xe.shape[0], dtype=jnp.uint32)
+
+    if method == "quartet" and qc.fp4_allgather:
+        # quantize the stacked expert weights BEFORE vmap so the FSDP gather
+        # moves int8 codes (the sharding constraint can't live under vmap)
+        from repro.core.quartet import quartet_linear_pq, quest_qdq_gathered
+
+        wg_v, wg_m = quest_qdq_gathered(params["gate"], qc)
+        wu_v, wu_m = quest_qdq_gathered(params["up"], qc)
+        wd_v, wd_m = quest_qdq_gathered(params["down"], qc)
+
+        def one(x, gv, gm, uv, um, dv, dm, s):
+            g = quartet_linear_pq(x, gv, gm, L.seed_fold(s, 21), qc)
+            u = quartet_linear_pq(x, uv, um, L.seed_fold(s, 22), qc)
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+            return quartet_linear_pq(h, dv, dm, L.seed_fold(s, 23), qc)
+
+        return jax.vmap(one)(xe, wg_v, wg_m, wu_v, wu_m, wd_v, wd_m, seeds)
+
+    def one(x, wg, wu, wd, s):
+        g = L.dense({"w": wg}, x, L.seed_fold(s, 21), qc, method)
+        u = L.dense({"w": wu}, x, L.seed_fold(s, 22), qc, method)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return L.dense({"w": wd}, h, L.seed_fold(s, 23), qc, method)
+
+    return jax.vmap(one)(xe, params["gate"], params["up"], params["down"], seeds)
+
+
+def moe_ffn(params, x, seed, cfg: ModelConfig, method: str = "quartet",
+            group_tokens: int = 4096):
+    """x: [B, S, D] → (y [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.experts_per_token
+    g = min(group_tokens, T)
+    G = T // g
+    assert G * g == T, f"tokens {T} not divisible into groups of {g}"
+    xg = x.reshape(G, g, D)
+
+    # --- router (bf16, tiny) -------------------------------------------------
+    logits = L.dense({"w": params["router"]["w"]}, xg, seed, cfg.quartet, "bf16")
+    logits = logits.astype(jnp.float32)  # [G, g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # [G, g, k]
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    gates = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=jnp.float32)
+                    * top_vals[..., None], axis=2)  # [G, g, E]
+
+    # --- aux losses: load balance [Switch] + router z-loss -------------------
+    me = jnp.mean(gates > 0, axis=1)  # fraction of tokens per expert [G, E]
+    pe = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(me * pe, axis=-1))
+    zloss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = aux + cfg.router_zloss * zloss
+
+    # --- capacity selection: per (G, E) the top-c gate tokens ----------------
+    c = moe_capacity(cfg, g)
+    scores = jnp.where(gates > 0, gates, NEG_INF)  # [G, g, E]
+    sel_val, sel_idx = jax.lax.top_k(jnp.swapaxes(scores, 1, 2), min(c, g))  # [G, E, c]
+    sel_gate = jnp.where(sel_val > 0, sel_val, 0.0)
+
+    # --- dispatch: gather selected tokens -------------------------------------
+    xe = jnp.take_along_axis(
+        xg[:, None, :, :],  # [G, 1, g, D]
+        sel_idx[..., None],  # [G, E, c, 1]
+        axis=2,
+    )  # [G, E, c, D]
+
+    # --- expert compute (E sharded over "model") ------------------------------
+    xe = jnp.swapaxes(xe, 0, 1).reshape(E, G * min(c, g), D)
+    ye = _expert_ffn(xe, params, seed, cfg, method)
+    ye = jnp.swapaxes(ye.reshape(E, G, min(c, g), D), 0, 1)  # [G, E, c, D]
+    ye = ye * sel_gate[..., None].astype(ye.dtype)
+
+    # --- combine: scatter-add back to token order -----------------------------
+    # bf16 combine: halves the cross-model-axis reduction bytes (≤ top-k
+    # gate-weighted summands per token — bf16 addition is ample)
+    out = jnp.zeros((G, g, D), x.dtype)
+    gidx = jnp.arange(G)[:, None, None]
+    out = out.at[gidx, sel_idx].add(ye.astype(x.dtype))
+    y = out.reshape(B, S, D)
+
+    if cfg.moe_dense_residual:
+        y = y + mlp(params["dense_mlp"], x, L.seed_fold(seed, 30), cfg, method)
+    return y.astype(x.dtype), aux
+
+
+def init_moe_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    init_norm, _ = L.make_norm(cfg.norm)
+    return {
+        "attn_norm": init_norm(cfg.d_model, dtype),
+        "attn": init_attention(k1, cfg, dtype),
+        "mlp_norm": init_norm(cfg.d_model, dtype),
+        "moe": init_moe_ffn(k2, cfg, dtype),
+    }
+
+
+def moe_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index, method):
+    _, norm = L.make_norm(cfg.norm)
+    h, new_cache = attention(
+        params["attn"], norm(params["attn_norm"], x, cfg.norm_eps), positions,
+        L.seed_fold(seed, 100), cfg, causal=True,
+        kv_cache=cache, cache_index=cache_index, method=method,
+    )
+    x = x + h
+    h, aux = moe_ffn(params["moe"], norm(params["mlp_norm"], x, cfg.norm_eps),
+                     L.seed_fold(seed, 200), cfg, method)
+    return x + h, new_cache, aux

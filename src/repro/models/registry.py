@@ -1,0 +1,133 @@
+"""Uniform model API over the six families.
+
+``build_model(cfg)`` → Model(init, forward, cache_spec) where forward has one
+signature for every family:
+
+    forward(params, tokens, seed, *, positions=None, caches=None,
+            cache_index=None, extra=None, build_cross=False, method="quartet")
+        → (logits f32, new_caches, aux_loss)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L  # noqa: F401  (re-export convenience)
+from repro.models.encdec import encdec_cache_spec, encdec_forward, init_encdec_lm
+from repro.models.hybrid import hybrid_cache_spec, hybrid_forward, init_hybrid_lm
+from repro.models.moe import init_moe_block, moe_block
+from repro.models.ssm import init_mamba1_block, mamba1_block, mamba1_cache_spec
+from repro.models.transformer import (
+    dense_block,
+    dense_cache_spec,
+    init_dense_block,
+    init_lm,
+    lm_forward,
+    lm_head_apply,
+)
+from repro.models.vlm import init_vlm_lm, vlm_cache_spec, vlm_forward
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable  # (key) -> params pytree
+    forward: Callable  # unified signature above (+ features_only=True)
+    cache_spec: Callable  # (batch, max_len) -> cache ShapeDtypeStruct pytree
+    head: Callable = None  # (params, features, seed, method) -> f32 logits
+
+
+def _stacked_spec(spec_fn, n):
+    def f(batch, max_len):
+        spec = spec_fn(batch)
+        return jax.tree.map(lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), spec)
+    return f
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "ssm"):
+        block_init = {"dense": init_dense_block, "moe": init_moe_block,
+                      "ssm": init_mamba1_block}[fam]
+        block_apply = {"dense": dense_block, "moe": moe_block,
+                       "ssm": mamba1_block}[fam]
+
+        def init(key):
+            return init_lm(key, cfg, block_init)
+
+        def forward(params, tokens, seed, *, positions=None, caches=None,
+                    cache_index=None, extra=None, build_cross=False,
+                    method="quartet", features_only=False):
+            return lm_forward(params, tokens, cfg, seed, positions=positions,
+                              caches=caches, cache_index=cache_index,
+                              block_apply=block_apply, method=method, extra=extra,
+                              features_only=features_only)
+
+        if fam == "ssm":
+            def cache_spec(batch, max_len):
+                spec = mamba1_cache_spec(cfg, batch)
+                return jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((cfg.num_layers, *s.shape), s.dtype), spec)
+        else:
+            def cache_spec(batch, max_len):
+                spec = dense_cache_spec(cfg, batch, max_len)
+                return jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((cfg.num_layers, *s.shape), s.dtype), spec)
+        head = lambda params, x, seed, method="quartet": lm_head_apply(
+            params, x, cfg, seed, method)
+        return Model(cfg, init, forward, cache_spec, head)
+
+    if fam == "hybrid":
+        def forward(params, tokens, seed, *, positions=None, caches=None,
+                    cache_index=None, extra=None, build_cross=False,
+                    method="quartet", features_only=False):
+            return hybrid_forward(params, tokens, cfg, seed, positions=positions,
+                                  caches=caches, cache_index=cache_index,
+                                  method=method, extra=extra,
+                                  features_only=features_only)
+        head = lambda params, x, seed, method="quartet": lm_head_apply(
+            params, x, cfg, seed, method)
+        return Model(cfg, lambda key: init_hybrid_lm(key, cfg), forward,
+                     functools.partial(hybrid_cache_spec, cfg), head)
+
+    if fam == "encdec":
+        def forward(params, tokens, seed, *, positions=None, caches=None,
+                    cache_index=None, extra=None, build_cross=False,
+                    method="quartet", features_only=False):
+            extra = extra or {}
+            return encdec_forward(params, tokens, cfg, seed, positions=positions,
+                                  source_embeds=extra.get("source_embeds"),
+                                  memory=extra.get("memory"), caches=caches,
+                                  cache_index=cache_index, build_cross=build_cross,
+                                  method=method, features_only=features_only)
+
+        def head(params, x, seed, method="quartet"):
+            from repro.distributed.context import constrain_logits
+            from repro.models import layers as L
+            _, norm = L.make_norm(cfg.norm)
+            x = norm(params["decoder"]["final_norm"], x, cfg.norm_eps)
+            logits = L.unembed(params["embed"], x, L.seed_fold(seed, 999),
+                               cfg.quartet, cfg.quantize_lm_head, method)
+            return constrain_logits(logits.astype(jax.numpy.float32))
+
+        return Model(cfg, lambda key: init_encdec_lm(key, cfg), forward,
+                     functools.partial(encdec_cache_spec, cfg), head)
+
+    if fam == "vlm":
+        def forward(params, tokens, seed, *, positions=None, caches=None,
+                    cache_index=None, extra=None, build_cross=False,
+                    method="quartet", features_only=False):
+            extra = extra or {}
+            return vlm_forward(params, tokens, cfg, seed, positions=positions,
+                               image_embeds=extra.get("image_embeds"), caches=caches,
+                               cache_index=cache_index, method=method,
+                               features_only=features_only)
+        head = lambda params, x, seed, method="quartet": lm_head_apply(
+            params, x, cfg, seed, method)
+        return Model(cfg, lambda key: init_vlm_lm(key, cfg), forward,
+                     functools.partial(vlm_cache_spec, cfg), head)
+
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,244 @@
+"""State-space blocks: Mamba1 (falcon-mamba-7b) and Mamba2/SSD (zamba2-7b).
+
+Quartet applies to every projection GEMM (in/x/dt/out) — the selective-scan
+recurrence itself is elementwise and stays in fp32 (see DESIGN.md
+§Arch-applicability).  TPU adaptation of the scan:
+
+* mamba1: the recurrence couples (channel × state) inside an exp, so it does
+  not factor into GEMMs; we run a `lax.scan` over time on an fp32 [B, Di, N]
+  state — the projections around it carry the FLOPs.  This is O(S) compute
+  and O(1) state: exactly why `long_500k` is assigned to the SSM archs.
+* mamba2: A is a per-head scalar → the SSD chunked form turns the scan into
+  chunk-local attention-like matmuls (MXU) + an O(S/Lc) inter-chunk scan.
+
+Both provide a single-token ``*_step`` used by the serving engine, carrying
+(conv_state [B, K-1, Di], ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv.  x: [B, S, Di], w: [K, Di], b: [Di].
+    ``state``: [B, K-1, Di] previous inputs (decode); returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, K-1+S, Di]
+    y = sum(xp[:, k : k + x.shape[1], :] * w[k][None, None, :] for k in range(K))
+    new_state = xp[:, -(K - 1) :, :]
+    return y + b[None, None, :], new_state
+
+
+def _softplus(x):
+    return jax.nn.softplus(x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n, kc = cfg.ssm_state, cfg.ssm_conv
+    r = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": L.init_rmsnorm(d, dtype),
+        "in_proj": L.init_dense(ks[0], d, 2 * di, dtype),
+        "conv_w": L.trunc_normal(ks[1], (kc, di), 1.0 / np.sqrt(kc * di) * np.sqrt(di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.init_dense(ks[2], di, r + 2 * n, dtype),
+        "dt_proj": L.init_dense(ks[3], r, di, dtype, use_bias=True),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_dense(ks[4], di, d, dtype),
+    }
+
+
+def _mamba1_scan(h0, a, bx):
+    """h_t = a_t · h_{t-1} + bx_t over time.  a, bx: [S, B, Di, N]."""
+
+    def body(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    return jax.lax.scan(body, h0, (a, bx))
+
+
+def mamba1_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index, method):
+    """x: [B, S, D].  cache: (conv_state, h) for decode, else None."""
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n, r = cfg.ssm_state, max(d // 16, 1)
+    qc = cfg.quartet
+    B, S, _ = x.shape
+
+    xin = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    xz = L.dense(params["in_proj"], xin, L.seed_fold(seed, 1), qc, method)
+    x1, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache[0] if cache is not None else None
+    x1, new_conv = _causal_conv(x1, params["conv_w"].astype(jnp.float32),
+                                params["conv_b"].astype(jnp.float32), conv_state)
+    x1 = jax.nn.silu(x1.astype(jnp.float32)).astype(x.dtype)
+
+    proj = L.dense(params["x_proj"], x1, L.seed_fold(seed, 2), qc, method)
+    dt_r, Bm, Cm = jnp.split(proj.astype(jnp.float32), [r, r + n], axis=-1)
+    dt = _softplus(L.dense(params["dt_proj"], dt_r.astype(x.dtype),
+                           L.seed_fold(seed, 3), qc, method))  # [B,S,Di]
+    A = -jnp.exp(params["A_log"])  # [Di, N]
+
+    a = jnp.exp(dt[..., None] * A[None, None])  # [B,S,Di,N]
+    bx = (dt * x1.astype(jnp.float32))[..., None] * Bm[:, :, None, :]  # [B,S,Di,N]
+
+    h0 = cache[1] if cache is not None else jnp.zeros((B, di, n), jnp.float32)
+    hT, hs = _mamba1_scan(h0, jnp.moveaxis(a, 1, 0), jnp.moveaxis(bx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)  # [B,S,Di,N]
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm) + params["D"][None, None] * x1.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = L.dense(params["out_proj"], y, L.seed_fold(seed, 4), qc, method)
+
+    new_cache = None if cache is None else (new_conv, hT)
+    return x + out, new_cache, jnp.float32(0.0)
+
+
+def mamba1_cache_spec(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    return (
+        jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, di), jnp.dtype(cfg.dtype)),
+        jax.ShapeDtypeStruct((batch, di, cfg.ssm_state), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD chunked form)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n, kc, hd = cfg.ssm_state, cfg.ssm_conv, cfg.ssm_head_dim
+    nh = di // hd
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": L.init_rmsnorm(d, dtype),
+        "in_proj": L.init_dense(ks[0], d, 2 * di + 2 * n + nh, dtype),
+        "conv_w": L.trunc_normal(ks[1], (kc, di + 2 * n), 1.0 / np.sqrt(kc), dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": L.init_rmsnorm(di, dtype),
+        "out_proj": L.init_dense(ks[2], di, d, dtype),
+    }
+
+
+def _ssd_chunk_scan(xh, dt, A, Bm, Cm, h0, chunk: int):
+    """SSD: xh [B,S,nh,hd], dt [B,S,nh] (post-softplus), A [nh] (<0),
+    Bm/Cm [B,S,N].  Returns (y [B,S,nh,hd], hT [B,nh,hd,N])."""
+    B, S, nh, hd = xh.shape
+    N = Bm.shape[-1]
+    Lc = min(chunk, S)
+    while S % Lc != 0:
+        Lc //= 2
+    nc = S // Lc
+
+    xc = xh.reshape(B, nc, Lc, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Lc, nh)
+    Bc = Bm.reshape(B, nc, Lc, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Lc, N).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]  # [B,nc,Lc,nh] (negative)
+    cum = jnp.cumsum(dA, axis=2)
+
+    def body(h, inp):
+        xcb, dtb, Bb, Cb, cumb = inp  # per-chunk slices, chunk axis leading removed
+        # intra-chunk (attention-like): y[t] = Σ_{s<=t} C_t·B_s exp(cum_t-cum_s) dt_s x_s
+        Lmat = cumb[:, :, None, :] - cumb[:, None, :, :]  # [B,Lc,Lc,nh]
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        # mask *inside* the exp: masked entries are exp(-1e30) = 0 with zero
+        # gradient; exp-then-where would backprop NaN through the +inf side
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], Lmat, -1e30))
+        CB = jnp.einsum("btn,bsn->bts", Cb, Bb, preferred_element_type=jnp.float32)
+        scores = CB[..., None] * decay * dtb[:, None, :, :]  # [B,t,s,nh]
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, xcb,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: incoming state
+        y_inter = jnp.einsum("btn,bhdn->bthd", Cb, h,
+                             preferred_element_type=jnp.float32) * jnp.exp(cumb)[..., None]
+        # state update
+        tot = cumb[:, -1:, :]  # [B,1,nh]
+        dec_end = jnp.exp(tot - cumb) * dtb  # [B,Lc,nh]
+        h_new = jnp.exp(tot[:, 0, :])[:, :, None, None] * h + jnp.einsum(
+            "bshd,bsn,bsh->bhdn", xcb, Bb, dec_end, preferred_element_type=jnp.float32)
+        return h_new, y_intra + y_inter
+
+    hT, ys = jax.lax.scan(
+        body, h0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+         jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(cum, 1, 0)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, hd)
+    return y, hT
+
+
+def mamba2_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index, method):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    qc = cfg.quartet
+    B, S, _ = x.shape
+
+    xin = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+    zxbcdt = L.dense(params["in_proj"], xin, L.seed_fold(seed, 1), qc, method)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+
+    conv_state = cache[0] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"].astype(jnp.float32),
+                                 params["conv_b"].astype(jnp.float32), conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    x1, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = _softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])  # [B,S,nh]
+    A = -jnp.exp(params["A_log"])
+    xh = x1.reshape(B, S, nh, hd)
+
+    h0 = cache[1] if cache is not None else jnp.zeros((B, nh, hd, n), jnp.float32)
+    y, hT = _ssd_chunk_scan(xh, dt, A, Bm, Cm, h0, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    y = L.rmsnorm(params["gate_norm"], (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                  cfg.norm_eps)
+    out = L.dense(params["out_proj"], y, L.seed_fold(seed, 4), qc, method)
+
+    new_cache = None if cache is None else (new_conv, hT)
+    return x + out, new_cache, jnp.float32(0.0)
+
+
+def mamba2_cache_spec(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    return (
+        jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, di + 2 * cfg.ssm_state), jnp.dtype(cfg.dtype)),
+        jax.ShapeDtypeStruct((batch, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,12 @@
+"""Optimizers and distributed-optimization tricks.
+
+AdamW with fp32 master weights (the paper's setup, App. A.1), an 8-bit
+block-scaled Adam variant (beyond-paper; makes the 235B/480B MoE optimizer
+state fit a v5e pod), cosine schedule with warmup, global-norm clipping, and
+SR-quantized gradient all-reduce with error feedback.
+"""
+
+from repro.optim.adamw import adamw, adamw8bit  # noqa: F401
+from repro.optim.schedule import cosine_warmup  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401
+from repro.optim.grad_compress import compress_decompress_gradient  # noqa: F401

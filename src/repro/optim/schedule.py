@@ -1,0 +1,20 @@
+"""LR schedules: cosine decay with linear warmup (paper: 10% warmup)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak_lr: float, total_steps: int, warmup_frac: float = 0.1,
+                  final_frac: float = 0.0):
+    warmup = max(int(total_steps * warmup_frac), 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

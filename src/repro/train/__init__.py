@@ -1,0 +1,6 @@
+"""Training & serving runtime: losses, TrainState, step builders, the
+training loop with fault tolerance, and the batched serving engine."""
+
+from repro.train.losses import cross_entropy_loss  # noqa: F401
+from repro.train.state import TrainState, make_train_state  # noqa: F401
+from repro.train.steps import make_eval_step, make_train_step  # noqa: F401

@@ -1,0 +1,99 @@
+"""The training loop: checkpoint/restart, straggler monitoring, eval.
+
+``train(...)`` is the single entry point used by the launcher and the
+examples.  It is restart-safe by construction: state (params, optimizer,
+step) and the data-pipeline position are both recoverable from the latest
+checkpoint, so a killed process rerun with the same arguments continues
+bit-identically (the per-step RNG seed is the step counter).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.data.pipeline import TokenBatcher
+from repro.models.registry import Model
+from repro.optim.adamw import Optimizer
+from repro.train.state import TrainState, make_train_state
+from repro.train.steps import make_eval_step, make_train_step
+from repro.train.straggler import StragglerMonitor
+
+
+def train(
+    model: Model,
+    optimizer: Optimizer,
+    batcher: TokenBatcher,
+    total_steps: int,
+    *,
+    method: str = "quartet",
+    master_dtype: str = "float32",
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 500,
+    eval_batcher: TokenBatcher | None = None,
+    eval_every: int = 0,
+    eval_batches: int = 8,
+    log_every: int = 10,
+    log_fn: Callable = print,
+    grad_compress: bool = False,
+    microbatch: int = 1,
+    extra_batch: dict | None = None,
+    seed: int = 0,
+) -> tuple[TrainState, list[dict]]:
+    params = model.init(jax.random.PRNGKey(seed))
+    state = make_train_state(params, optimizer, master_dtype, grad_compress)
+    del params
+
+    ckpt = Checkpointer(checkpoint_dir) if checkpoint_dir else None
+    start_step = 0
+    if ckpt and ckpt.latest_step() is not None:
+        state, meta = ckpt.restore(state)
+        start_step = int(meta["step"])
+        log_fn(f"[resume] restored step {start_step} from {checkpoint_dir}")
+
+    step_fn = jax.jit(make_train_step(
+        model, optimizer, method=method, grad_compress=grad_compress,
+        microbatch=microbatch), donate_argnums=(0,))
+    eval_fn = jax.jit(make_eval_step(model, method=method)) if eval_batcher else None
+
+    monitor = StragglerMonitor(
+        on_straggler=lambda s, dt, mu: log_fn(
+            f"[straggler] step {s}: {dt:.2f}s vs ewma {mu:.2f}s"))
+    history = []
+    for step in range(start_step, total_steps):
+        batch = {k: jnp.asarray(v) for k, v in batcher.batch(step).items()}
+        if extra_batch:
+            batch.update(extra_batch)
+        monitor.step_start()
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        verdict = monitor.step_end(step)
+        metrics.update(step=step, dt=verdict["dt"])
+        history.append(metrics)
+        if log_every and step % log_every == 0:
+            log_fn(f"step {step:6d} loss {metrics['loss']:.4f} "
+                   f"gnorm {metrics['grad_norm']:.3f} ({verdict['dt']:.2f}s)")
+        if eval_fn and eval_every and step and step % eval_every == 0:
+            log_fn(f"step {step:6d} eval_loss {evaluate(model, state, eval_batcher, eval_batches, method):.4f}")
+        if ckpt and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.save(total_steps, state, blocking=True)
+    return state, history
+
+
+def evaluate(model: Model, state: TrainState, batcher: TokenBatcher,
+             n_batches: int, method: str = "quartet") -> float:
+    eval_fn = jax.jit(make_eval_step(model, method=method))
+    tot, cnt = 0.0, 0.0
+    for i in range(n_batches):
+        batch = {k: jnp.asarray(v) for k, v in batcher.batch(10_000_000 + i).items()}
+        m = eval_fn(state.params, batch)
+        tot += float(m["nll"]) * float(m["tokens"])
+        cnt += float(m["tokens"])
+    return tot / max(cnt, 1.0)

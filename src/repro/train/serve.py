@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + incremental decode with per-family
+caches (KV for attention, conv+state for SSM, cross-KV for enc-dec/VLM).
+
+``make_prefill_step`` / ``make_decode_step`` produce jit-able functions used
+both by the serving example and by the dry-run's ``prefill_*`` / ``decode_*``
+shape cells.  Decode processes ONE new token against a length-``max_len``
+cache, exactly as the assigned ``decode_32k`` / ``long_500k`` shapes specify.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+def init_cache(model: Model, batch: int, max_len: int, zeros: bool = True):
+    """Materialize (or spec, zeros=False) the decode cache."""
+    spec = model.cache_spec(batch, max_len)
+    if not zeros:
+        return spec
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def make_prefill_step(model: Model, *, method: str = "quartet") -> Callable:
+    cfg = model.cfg
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def prefill(params, tokens, caches, extra=None):
+        """tokens [B, S] → (next_token_logits [B, V], caches, next_pos [B])."""
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        B, S = tokens.shape
+        idx0 = jnp.zeros((B,), jnp.int32)
+        logits, caches, _ = model.forward(
+            cparams, tokens, jnp.uint32(0), caches=caches, cache_index=idx0,
+            extra=extra, build_cross=True, method=method)
+        return logits[:, -1, :], caches, jnp.full((B,), S, jnp.int32)
+
+    return prefill
+
+
+def make_decode_step(model: Model, *, method: str = "quartet") -> Callable:
+    cfg = model.cfg
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def decode(params, token, position, caches, extra=None):
+        """token [B, 1], position [B] → (logits [B, V], caches, position+1)."""
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        positions = position[:, None]
+        logits, caches, _ = model.forward(
+            cparams, token, jnp.uint32(0), positions=positions, caches=caches,
+            cache_index=position, extra=extra, method=method)
+        return logits[:, -1, :], caches, position + 1
+
+    return decode
+
+
+def greedy_generate(model: Model, params, prompt: jnp.ndarray, max_new: int,
+                    max_len: int, extra=None, method: str = "quartet"):
+    """Reference generation loop (prefill → lax.scan of decode steps)."""
+    prefill = make_prefill_step(model, method=method)
+    decode = make_decode_step(model, method=method)
+    caches = init_cache(model, prompt.shape[0], max_len)
+    logits, caches, pos = prefill(params, prompt, caches, extra=extra)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+    def body(carry, _):
+        tok, pos, caches = carry
+        logits, caches, pos = decode(params, tok, pos, caches, extra=extra)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return (tok, pos, caches), tok[:, 0]
+
+    (_, _, _), toks = jax.lax.scan(body, (tok, pos, caches), None, length=max_new - 1)
+    return jnp.concatenate([tok, jnp.moveaxis(toks, 0, 1)], axis=1)

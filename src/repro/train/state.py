@@ -1,0 +1,29 @@
+"""TrainState: master params + optimizer state + step, with the paper's
+mixed-precision policy (fp32/bf16 master outside the quantized graph;
+MXFP4 only inside the linear layers via quartet_linear)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any  # master weights (fp32 or bf16 per config)
+    opt_state: Any
+    step: jnp.ndarray
+    err: Any = None  # gradient-compression error feedback (optional)
+
+
+def make_train_state(params, optimizer: Optimizer, master_dtype: str = "float32",
+                     grad_compress: bool = False) -> TrainState:
+    master = jax.tree.map(lambda p: p.astype(jnp.dtype(master_dtype))
+                          if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+    err = None
+    if grad_compress:
+        err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), master)
+    return TrainState(master, optimizer.init(master), jnp.zeros((), jnp.int32), err)

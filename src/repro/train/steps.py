@@ -1,0 +1,117 @@
+"""Step builders: the jit-able train / eval / serve step functions.
+
+``make_train_step`` wires the full paper pipeline: bf16 compute params cast
+from the master, Quartet (or baseline) quantized forward/backward, global-norm
+clip, AdamW, optional SR-int8 gradient compression with error feedback.  The
+per-step ``seed`` (derived from the step counter) drives every stochastic
+quantizer so steps are bit-reproducible given the state.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import Model
+from repro.optim.adamw import Optimizer, apply_updates
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.grad_compress import compress_decompress_gradient
+from repro.train.losses import chunked_lm_loss, cross_entropy_loss
+from repro.train.state import TrainState
+
+
+def make_train_step(model: Model, optimizer: Optimizer, *,
+                    method: str = "quartet", clip_norm: float = 1.0,
+                    aux_weight: float = 0.01, z_loss: float = 0.0,
+                    grad_compress: bool = False, loss_chunk: int = 512,
+                    microbatch: int = 1) -> Callable:
+    """``microbatch`` > 1 splits the global batch into that many sequential
+    accumulation steps — activation memory scales down proportionally (the
+    standard fit knob for the large train_4k cells)."""
+    cfg = model.cfg
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch, seed):
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        extra = {k: v for k, v in batch.items()
+                 if k in ("source_embeds", "image_embeds")}
+        feats, _, aux = model.forward(cparams, batch["tokens"], seed,
+                                      extra=extra or None, method=method,
+                                      features_only=True)
+        mask = batch.get("loss_mask")
+        loss, metrics = chunked_lm_loss(model.head, cparams, feats,
+                                        batch["labels"], seed, mask, z_loss,
+                                        chunk=loss_chunk, method=method)
+        metrics["aux"] = aux
+        return loss + aux_weight * aux, metrics
+
+    def grads_of(params, batch, seed):
+        if microbatch <= 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, seed)
+        mb = jax.tree.map(
+            lambda x: x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:]),
+            batch)
+
+        from repro.distributed.context import constrain_params
+
+        def body(carry, mbatch_i):
+            acc, loss_acc, i = carry
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mbatch_i, seed + i)
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+            # keep the accumulator on the parameter sharding (else GSPMD
+            # replicates a full f32 copy of the model per device)
+            acc = constrain_params(acc)
+            return (acc, loss_acc + loss, i + jnp.uint32(1)), metrics
+
+        zeros = constrain_params(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (gsum, loss_sum, _), ms = jax.lax.scan(
+            body, (zeros, jnp.float32(0.0), jnp.uint32(0)), mb)
+        grads = jax.tree.map(lambda g: g / microbatch, gsum)
+        metrics = jax.tree.map(lambda m: m.mean(), ms)
+        return (loss_sum / microbatch, metrics), grads
+
+    def train_step(state: TrainState, batch):
+        seed = (state.step.astype(jnp.uint32) + jnp.uint32(1)) * jnp.uint32(microbatch)
+        (loss, metrics), grads = grads_of(state.params, batch, seed)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_err = state.err
+        if grad_compress and state.err is not None:
+            key = jax.random.fold_in(jax.random.PRNGKey(0xC0), seed)
+            pairs = jax.tree.map(
+                lambda g, e: compress_decompress_gradient(g, e, key),
+                grads, state.err)
+            istup = lambda x: isinstance(x, tuple)
+            grads = jax.tree.map(lambda o: o[0], pairs, is_leaf=istup)
+            new_err = jax.tree.map(lambda o: o[1], pairs, is_leaf=istup)
+        updates, opt_state = optimizer.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics.update(loss=loss, grad_norm=gnorm)
+        return TrainState(params, opt_state, state.step + 1, new_err), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, *, method: str = "quartet") -> Callable:
+    cfg = model.cfg
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def eval_step(params, batch):
+        cparams = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        extra = {k: v for k, v in batch.items()
+                 if k in ("source_embeds", "image_embeds")}
+        logits, _, _ = model.forward(cparams, batch["tokens"], jnp.uint32(0),
+                                     extra=extra or None, method=method)
+        loss, metrics = cross_entropy_loss(logits, batch["labels"],
+                                           batch.get("loss_mask"))
+        return metrics
+
+    return eval_step

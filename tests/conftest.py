@@ -1,0 +1,13 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real (single-CPU) device; only the dry-run
+script sets 512 placeholder devices."""
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,144 @@
+"""Distribution-layer tests: sharding rules, cache partitioning, and a
+small-mesh end-to-end lowering (8 fake devices, subprocess — the main test
+process must keep seeing 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as SH
+
+
+class FakeMesh:
+    """axis_names/shape-only stand-in (rule logic is pure arithmetic)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _spec(path, shape, mesh=MESH):
+    return SH._spec_for(path, shape, mesh, SH.fsdp_axes(mesh, True))
+
+
+def test_column_parallel_rules():
+    assert _spec("layers/attn/wq/w", (28, 2048, 2048)) == P(None, ("data",), "model")
+    assert _spec("layers/mlp/gate/w", (28, 2048, 6144)) == P(None, ("data",), "model")
+
+
+def test_row_parallel_rules():
+    assert _spec("layers/attn/wo/w", (28, 2048, 2048)) == P(None, "model", ("data",))
+    assert _spec("layers/mlp/down/w", (28, 6144, 2048)) == P(None, "model", ("data",))
+
+
+def test_moe_expert_rules():
+    assert _spec("layers/moe/gate", (94, 128, 4096, 1536)) == \
+        P(None, "model", ("data",), None)
+    assert _spec("layers/moe/down", (94, 128, 1536, 4096)) == \
+        P(None, "model", None, ("data",))
+
+
+def test_embed_rules():
+    assert _spec("embed/table", (151936, 2048)) == P("model", ("data",))
+
+
+def test_divisibility_fallback():
+    # 24 heads × hd 128 = 3072 divides 16 → sharded via the fused projection
+    assert _spec("layers/attn/wq/w", (30, 3072, 3072)) == P(None, ("data",), "model")
+    # a dim that does NOT divide the axis falls back to None
+    assert _spec("layers/attn/wq/w", (2, 100, 100)) == P(None, None, None)
+
+
+def test_norms_replicated():
+    assert _spec("layers/attn_norm/scale", (28, 2048)) == P(None, None)
+
+
+def test_multipod_fsdp_includes_pod():
+    spec = _spec("layers/mlp/gate/w", (28, 2048, 6144), MESH3)
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_batch_partition_fallbacks():
+    assert SH.batch_partition(MESH, 256, 4096) == P(("data",), None)
+    # batch of 1: context parallelism over the sequence
+    assert SH.batch_partition(MESH, 1, 524288) == P(None, "data")
+    assert SH.batch_partition(MESH3, 256, 4096) == P(("pod", "data"), None)
+
+
+def test_cache_partition_heads_and_seq():
+    cache = jax.ShapeDtypeStruct((28, 128, 32768, 8, 128), jnp.bfloat16)
+    spec = SH.cache_partition(cache, MESH, 128)
+    # batch → data; kv-heads too small (8 < 16) → largest dim (seq) → model
+    assert spec == P(None, ("data",), "model", None, None)
+    long = jax.ShapeDtypeStruct((13, 1, 524288, 32, 112), jnp.bfloat16)
+    spec = SH.cache_partition(long, MESH, 1)
+    assert spec[3] == "model" and "data" in spec  # heads→model, seq→data
+
+
+def test_param_partition_covers_whole_tree():
+    """Every leaf of a real model gets a spec of matching rank."""
+    from repro.models import build_model
+    from repro.configs import get_reduced_config
+    cfg = get_reduced_config("qwen3-moe-235b-a22b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    mesh = FakeMesh({"data": 2, "model": 2})
+    specs = SH.param_partition(params, mesh)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) == len(p.shape)
+
+
+DRYRUN_SMOKE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+import repro.launch.dryrun as DR
+
+# shrink the production mesh to 2x4 for the in-CI lowering
+import repro.launch.mesh as M
+M.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    (2, 2, 2) if multi_pod else (2, 4),
+    ("pod", "data", "model") if multi_pod else ("data", "model"),
+    axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+DR.make_production_mesh = M.make_production_mesh
+
+import repro.configs.registry as REG
+import dataclasses
+cfg = REG.get_reduced_config("qwen3-1.7b")
+REG._MODULES_SAVE = None
+orig_get = REG.get_config
+REG.get_config = lambda name, **kw: cfg
+DR.get_config = REG.get_config
+
+rep, _, compiled = DR.lower_cell("qwen3-1.7b", "train_4k", False)
+assert rep["compile_s"] >= 0
+assert compiled.cost_analysis() is not None
+rep2, _, c2 = DR.lower_cell("qwen3-1.7b", "decode_32k", True)
+print("OK", rep["dominant"], rep2["mesh"])
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    """End-to-end dry-run machinery on an 8-device fake mesh (subprocess so
+    the parent keeps its single-device view)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", DRYRUN_SMOKE], capture_output=True,
+                       text=True, timeout=1200, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout

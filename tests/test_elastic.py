@@ -1,0 +1,48 @@
+"""Elastic restore: a checkpoint written under one configuration restores
+onto a different device layout (leaves are stored unsharded; placement is
+re-derived at restore — the scale-up/down restart path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.llama_paper import tiny_llama
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train.state import make_train_state
+
+
+def test_restore_with_explicit_shardings(tmp_path):
+    cfg = tiny_llama(d=64, layers=2, vocab=256)
+    model = build_model(cfg)
+    opt = adamw(1e-3)
+    state = make_train_state(model.init(jax.random.PRNGKey(0)), opt)
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(3, state, blocking=True)
+
+    # restore with explicit per-leaf shardings (single device here; on a new
+    # mesh these would be NamedShardings from distributed.sharding)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    shardings = jax.tree.map(
+        lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]), state)
+    restored, meta = ckpt.restore(like, shardings=shardings)
+    assert meta["step"] == 3
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_detects_structure_mismatch(tmp_path):
+    cfg = tiny_llama(d=64, layers=2, vocab=256)
+    model = build_model(cfg)
+    opt = adamw(1e-3)
+    state = make_train_state(model.init(jax.random.PRNGKey(0)), opt)
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, state, blocking=True)
+
+    wrong = make_train_state(
+        build_model(tiny_llama(d=64, layers=3, vocab=256)).init(
+            jax.random.PRNGKey(0)), opt)
+    import pytest
+    with pytest.raises(AssertionError):
+        ckpt.restore(wrong)

@@ -1,0 +1,51 @@
+"""Hadamard transform invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hadamard as H
+
+
+@given(st.sampled_from([2, 4, 8, 16, 32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_hadamard_matrix_orthogonal_involutory(g):
+    h = H.hadamard_matrix(g)
+    np.testing.assert_allclose(h @ h, np.eye(g), atol=1e-5)
+    np.testing.assert_allclose(h, h.T, atol=1e-7)
+
+
+def test_transform_preserves_norm_and_inverts():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    xh = H.hadamard_transform(x, g=32)
+    assert abs(float(jnp.linalg.norm(xh)) - float(jnp.linalg.norm(x))) < 1e-3
+    back = H.inverse_hadamard_transform(xh, g=32)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+def test_randomized_transform_product_exact():
+    """(X Ĥ)(Ĥᵀ Wᵀ)ᵀ == X Wᵀ — shared signs keep the GEMM exact."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(2), (8, 64))
+    signs = jax.random.rademacher(jax.random.PRNGKey(3), (64,), dtype=jnp.float32)
+    xh = H.randomized_hadamard_transform(x, signs)
+    wh = H.randomized_hadamard_transform(w, signs)
+    np.testing.assert_allclose(np.asarray(xh @ wh.T), np.asarray(x @ w.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_randomized_inverse():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 96))
+    signs = jax.random.rademacher(jax.random.PRNGKey(1), (96,), dtype=jnp.float32)
+    y = H.randomized_hadamard_transform(x, signs)
+    back = H.inverse_randomized_hadamard_transform(y, signs)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-4)
+
+
+def test_axis_argument():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 5))
+    y0 = H.hadamard_transform(x, g=32, axis=0)
+    y1 = H.hadamard_transform(x.T, g=32, axis=1).T
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-5)

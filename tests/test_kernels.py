@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exactness.
+
+Kernels run interpret=True on CPU (the Pallas interpreter executes the
+kernel body faithfully); the oracles are independent implementations from
+repro.core, so agreement is a real two-implementation check.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastrng
+from repro.kernels import ref as R
+from repro.kernels.hadamard_quant import hadamard_quest_quantize
+from repro.kernels.mxfp4_matmul import mxfp4_matmul
+from repro.kernels.sr_hadamard_quant import sr_hadamard_quantize
+
+SHAPES = [(32, 32), (8, 64), (96, 256), (128, 96), (257, 64), (64, 1024)]
+BLOCKS = [(32, 32), (64, 128), (256, 512)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hadamard_quest_kernel_vs_ref(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 1.9).astype(dtype)
+    c1, s1, m1 = hadamard_quest_quantize(x, block_m=64, block_k=128)
+    c2, s2, m2 = R.hadamard_quest_quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=0)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+@pytest.mark.parametrize("bm,bk", BLOCKS)
+def test_hadamard_quest_kernel_block_sweep(bm, bk):
+    x = jax.random.normal(jax.random.PRNGKey(1), (160, 512)) * 0.7
+    c1, s1, m1 = hadamard_quest_quantize(x, block_m=bm, block_k=bk)
+    c2, s2, m2 = R.hadamard_quest_quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_sr_kernel_vs_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(2), shape) * 2.3
+    signs = fastrng.rademacher(jnp.uint32(9), shape[1])
+    u = fastrng.uniform(jnp.uint32(5), shape)
+    c1, s1 = sr_hadamard_quantize(x, signs, u, block_m=64, block_k=128)
+    c2, s2 = R.sr_hadamard_quantize_ref(x, signs, u)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_sr_kernel_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 32)) * 1.1
+    signs = jnp.ones((32,), jnp.float32)
+
+    def one(seed):
+        u = fastrng.uniform(seed, (4, 32))
+        c, s = sr_hadamard_quantize(x, signs, u, block_m=4, block_k=32,
+                                    prescale=1.0)
+        return c.astype(jnp.float32) * 0.5 * s[..., :1]
+
+    n = 3000
+    vals = jax.vmap(one)(jnp.arange(n, dtype=jnp.uint32))
+    from repro.core.hadamard import hadamard_transform
+    target = hadamard_transform(x, g=32)
+    err = np.abs(np.asarray(vals.mean(0) - target)).max()
+    assert err < 0.08  # ≈ 5σ MC bound for gap ≤ 1
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 32, 32), (64, 128, 96), (96, 256, 192),
+                                   (100, 64, 50), (256, 512, 128)])
+def test_mxfp4_matmul_vs_ref(m, k, n):
+    x = jax.random.normal(jax.random.PRNGKey(4), (m, k)) * 1.5
+    w = jax.random.normal(jax.random.PRNGKey(5), (k, n)) * 0.5
+    ac, asc, _ = R.hadamard_quest_quantize_ref(x)
+    bct, bsct, _ = R.hadamard_quest_quantize_ref(w.T)
+    bc, bsc = bct.T, bsct.T
+    y1 = mxfp4_matmul(ac, asc, bc, bsc, block_m=64, block_n=64, block_k=128)
+    y2 = R.mxfp4_matmul_ref(ac, asc, bc, bsc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6, atol=1e-5)
+
+
+def test_matmul_block_sweep():
+    x = jax.random.normal(jax.random.PRNGKey(6), (128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(7), (256, 128))
+    ac, asc, _ = R.hadamard_quest_quantize_ref(x)
+    bct, bsct, _ = R.hadamard_quest_quantize_ref(w.T)
+    ref = R.mxfp4_matmul_ref(ac, asc, bct.T, bsct.T)
+    for bm, bn, bk in [(32, 32, 32), (128, 128, 256), (64, 128, 64)]:
+        y = mxfp4_matmul(ac, asc, bct.T, bsct.T, block_m=bm, block_n=bn, block_k=bk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-6, atol=1e-5)
+
+
+def test_kernel_path_forward_matches_jnp_path():
+    """quartet_linear(use_kernels=True) ≡ the jnp reference path (bit-exact
+    QDQ forward)."""
+    from repro.core.quartet import QuartetConfig, quartet_linear
+    x = jax.random.normal(jax.random.PRNGKey(8), (64, 256))
+    w = jax.random.normal(jax.random.PRNGKey(9), (256, 128)) * 0.05
+    yk = quartet_linear(x, w, jnp.uint32(5), QuartetConfig(use_kernels=True))
+    yj = quartet_linear(x, w, jnp.uint32(5), QuartetConfig(use_kernels=False))
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yj), atol=1e-5)
+
+
+def test_kernel_path_backward_close_to_jnp_path():
+    from repro.core.quartet import QuartetConfig, quartet_linear
+    x = jax.random.normal(jax.random.PRNGKey(10), (64, 256))
+    w = jax.random.normal(jax.random.PRNGKey(11), (256, 128)) * 0.05
+    f = lambda cfg: jax.grad(
+        lambda a, b: jnp.sum(quartet_linear(a, b, jnp.uint32(3), cfg) ** 2),
+        argnums=(0, 1))(x, w)
+    gk = f(QuartetConfig(use_kernels=True))
+    gj = f(QuartetConfig(use_kernels=False))
+    for a, b in zip(gk, gj):
+        cos = float(jnp.vdot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+        assert cos > 0.95  # same algorithm, independent SR randomness
+
+
+@pytest.mark.parametrize("s,t,causal", [(128, 128, True), (128, 128, False),
+                                        (256, 384, False), (100, 150, False),
+                                        (64, 64, True)])
+def test_flash_attention_vs_ref(s, t, causal):
+    from repro.kernels.flash_attention import flash_attention
+    if causal:
+        t = s  # causal masking assumes aligned q/kv positions
+    q = jax.random.normal(jax.random.PRNGKey(0), (4, s, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (4, t, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (4, t, 64))
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = R.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mha_flash_matches_blocked_attention():
+    """The Pallas serving kernel ≡ the jnp training attention (GQA)."""
+    from repro.kernels.flash_attention import mha_flash
+    from repro.models.attention import blocked_attention
+    B, S, Hq, Hkv, hd = 2, 128, 4, 2, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, Hq, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out_flash = mha_flash(q, k, v, causal=True, block_q=64, block_k=64)
+    out_jnp = blocked_attention(q, k, v, pos, causal=True, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out_flash, np.float32),
+                               np.asarray(out_jnp, np.float32),
+                               rtol=2e-3, atol=2e-3)

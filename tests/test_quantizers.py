@@ -1,0 +1,136 @@
+"""Quantizer properties: grid membership, scale correctness, SR unbiasedness,
+QuEST masks, the paper's Table-2 metric reproduction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import formats as F
+from repro.core import metrics as M
+from repro.core import quantizers as Q
+
+GRID = np.asarray(F.MXFP4.grid_array)
+
+
+def _on_grid(values, scales, block=32):
+    v = np.asarray(values).reshape(-1, block)
+    s = np.asarray(scales).reshape(-1, 1)
+    codes = v / s
+    return np.all(np.isin(codes.round(4), GRID.round(4)))
+
+
+@given(hnp.arrays(np.float32, (8, 64),
+                  elements=st.floats(-100, 100, width=32, allow_nan=False)))
+@settings(max_examples=50, deadline=None)
+def test_rtn_absmax_on_grid_and_no_clip(x):
+    r = Q.rtn_absmax(jnp.asarray(x), F.MXFP4)
+    assert _on_grid(r.values, r.scales)
+    assert bool(jnp.all(r.mask))  # ceil-mode absmax never clips
+    # power-of-two scales
+    s = np.asarray(r.scales)
+    np.testing.assert_array_equal(np.log2(s), np.round(np.log2(s)))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_sr_absmax_on_grid(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 2.5
+    r = Q.sr_absmax(x, jax.random.PRNGKey(seed + 1), F.MXFP4)
+    assert _on_grid(r.values, r.scales)
+
+
+def test_sr_unbiased_monte_carlo():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 1.7
+    n = 4000
+    vals = jax.vmap(lambda k: Q.sr_absmax(x, k).values)(
+        jax.random.split(jax.random.PRNGKey(1), n))
+    err = np.asarray(vals.mean(0) - x)
+    # CLT bound: per-element sd ≤ gap/2 ≈ scale; 5σ tolerance
+    scale = np.asarray(Q.sr_absmax(x, jax.random.PRNGKey(2)).scales).max()
+    assert np.abs(err).max() < 5 * scale / np.sqrt(n) * 3
+
+
+def test_sr_fast_unbiased_monte_carlo():
+    """The counter-hash PRNG path must be unbiased too."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 1.7
+    n = 4000
+    vals = jax.vmap(lambda s: Q.sr_absmax_fast(x, s).values)(
+        jnp.arange(n, dtype=jnp.uint32))
+    err = np.asarray(vals.mean(0) - x)
+    scale = np.asarray(Q.sr_absmax_fast(x, jnp.uint32(0)).scales).max()
+    assert np.abs(err).max() < 5 * scale / np.sqrt(n) * 3
+
+
+def test_quest_mask_marks_clipped():
+    x = jnp.array([[0.1] * 31 + [100.0]], jnp.float32)  # one huge outlier
+    r = Q.quest(x, F.MXFP4)
+    m = np.asarray(r.mask)[0]
+    assert not m[-1]  # the outlier is clipped -> gradient masked
+    assert m[:-1].all()
+
+
+def test_quest_beats_rtn_beats_sr_mse_on_gaussian():
+    """Table 2's MSE ordering (QuEST < RTN < SR) on Gaussian data."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 32))
+    mse = lambda r: float(jnp.mean((r.values - x) ** 2) / jnp.mean(x**2))
+    m_quest = mse(Q.quest(x))
+    m_rtn = mse(Q.rtn_absmax(x))
+    m_sr = mse(Q.sr_absmax(x, jax.random.PRNGKey(1)))
+    assert m_quest < m_rtn < m_sr
+    # paper's Table-2 ballpark: 1.35e-2 / 1.40e-2 / 2.84e-2
+    assert 0.011 < m_quest < 0.016
+    assert 0.012 < m_rtn < 0.017
+    assert 0.024 < m_sr < 0.034
+
+
+def test_pma_table2_reproduction():
+    """Misalignment (1 − E[1/S]): SR ≈ 0, RTN ≈ 1e-2, QuEST ≈ 1.3e-2."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    k = jax.random.PRNGKey(3)
+    sr = float(M.pma_misalignment(x, "sr_absmax", k, num_samples=32))
+    rtn = float(M.pma_misalignment(x, "rtn_absmax", k, num_samples=32))
+    quest = float(M.pma_misalignment(x, "quest", k, num_samples=32))
+    pma = float(M.pma_misalignment(x, "rtn_absmax_pma", k, num_samples=32))
+    assert abs(sr) < 2e-3
+    assert 5e-3 < rtn < 2e-2
+    assert 8e-3 < quest < 2.2e-2
+    assert abs(pma) < rtn / 2  # pseudo-unbiased correction works on average
+
+
+def test_half_codes_dequantize():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 2
+    r = Q.rtn_absmax(x, F.MXFP4)
+    deq = (r.codes.astype(jnp.float32).reshape(4, 2, 32) * 0.5
+           * r.scales[..., None]).reshape(4, 64)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(r.values), rtol=1e-6)
+
+
+def test_nvfp4_and_mxfp8_variants():
+    """Alternative hardware formats drive the same quantizer machinery."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    r16 = Q.quest(x, F.NVFP4)
+    assert r16.scales.shape == (64, 4)  # block 16
+    # E4M3 scales are not powers of two in general
+    r8 = Q.quest(x, F.MXFP8)
+    mse4 = float(jnp.mean((Q.quest(x, F.MXFP4).values - x) ** 2))
+    mse16 = float(jnp.mean((r16.values - x) ** 2))
+    mse8 = float(jnp.mean((r8.values - x) ** 2))
+    assert mse8 < mse16 <= mse4 * 1.05  # finer scales/bits → lower error
+
+
+def test_fastrng_uniformity():
+    from repro.core import fastrng
+    u = np.asarray(fastrng.uniform(jnp.uint32(7), (100_000,)))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.005
+    assert abs(np.corrcoef(u[:-1], u[1:])[0, 1]) < 0.01
+
+
+def test_fastrng_broadcasted_matches_flat_index():
+    """Per-dim iota formulation must equal hashing the flat linear index."""
+    from repro.core import fastrng
+    a = np.asarray(fastrng.random_bits(jnp.uint32(3), (6, 8), salt=5))
+    b = np.asarray(fastrng.random_bits(jnp.uint32(3), (48,), salt=5)).reshape(6, 8)
+    np.testing.assert_array_equal(a, b)

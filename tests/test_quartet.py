@@ -1,0 +1,128 @@
+"""Algorithm-1 level behaviour of quartet_linear."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quartet import (
+    BF16_CONFIG,
+    QUARTET_CONFIG,
+    QuartetConfig,
+    quartet_linear,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _xw(m=64, k=256, n=128, wscale=0.06):
+    x = jax.random.normal(KEY, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * wscale
+    return x, w
+
+
+def test_forward_relative_error_small():
+    x, w = _xw()
+    y = quartet_linear(x, w, jnp.uint32(1), QUARTET_CONFIG)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.25  # two MXFP4 quantizations ≈ sqrt(2·1.3e-2) each side
+
+
+def test_bf16_config_is_exact():
+    x, w = _xw()
+    y = quartet_linear(x, w, jnp.uint32(1), BF16_CONFIG)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=2e-2, atol=1e-2)
+
+
+def test_gradients_aligned_with_exact():
+    x, w = _xw()
+
+    def loss(x, w, cfg):
+        return jnp.sum(quartet_linear(x, w, jnp.uint32(3), cfg) ** 2)
+
+    gq = jax.grad(loss, (0, 1))(x, w, QUARTET_CONFIG)
+    ge = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2), (0, 1))(x, w)
+    for a, b in zip(gq, ge):
+        cos = float(jnp.vdot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+        assert cos > 0.9
+
+
+def test_gradient_unbiasedness_of_sr_backward():
+    """E[dW_quartet] ≈ dW of the quantized-forward function (the whole point
+    of the SR backward).  MC over seeds; RTN backward shows a visible bias."""
+    x, w = _xw(m=128, k=64, n=64, wscale=0.1)
+    dy = jax.random.normal(jax.random.PRNGKey(7), (128, 64))
+
+    def dw_of(cfg, seed):
+        _, vjp = jax.vjp(lambda ww: quartet_linear(x, ww, seed, cfg), w)
+        return vjp(dy)[0]
+
+    seeds = jnp.arange(600, dtype=jnp.uint32)
+    dws = jax.vmap(lambda s: dw_of(QUARTET_CONFIG, s))(seeds)
+    dw_mean = dws.mean(0)
+    # reference: backward of the *forward-quantized* linear without backward
+    # quantization (unbiased target)
+    cfg_ref = QuartetConfig(bwd_rounding="none", bwd_hadamard="none")
+    dw_ref = dw_of(cfg_ref, jnp.uint32(0))
+    rel = float(jnp.linalg.norm(dw_mean - dw_ref) / jnp.linalg.norm(dw_ref))
+    assert rel < 0.08, rel
+
+
+def test_non_divisible_output_dim():
+    """N not divisible by 32 exercises the exact zero-padding path."""
+    x = jax.random.normal(KEY, (64, 64))
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 72)) * 0.1
+    g = jax.grad(lambda a, b: jnp.sum(quartet_linear(a, b, jnp.uint32(1),
+                                                     QUARTET_CONFIG) ** 2),
+                 argnums=(0, 1))(x, w)
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in g)
+    assert g[1].shape == (64, 72)
+
+
+def test_zero_gradient_rows_finite():
+    x, w = _xw()
+    y, vjp = jax.vjp(lambda a, b: quartet_linear(a, b, jnp.uint32(1),
+                                                 QUARTET_CONFIG), x, w)
+    dy = jnp.zeros_like(y)
+    dx, dw = vjp(dy)
+    assert bool(jnp.all(jnp.isfinite(dx))) and bool(jnp.all(jnp.isfinite(dw)))
+    np.testing.assert_allclose(np.asarray(dx), 0.0, atol=1e-6)
+
+
+def test_batched_leading_dims():
+    x = jax.random.normal(KEY, (2, 8, 4, 64))
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 32)) * 0.1
+    y = quartet_linear(x, w, jnp.uint32(1), QUARTET_CONFIG)
+    assert y.shape == (2, 8, 4, 32)
+
+
+def test_deterministic_given_seed():
+    x, w = _xw()
+    f = lambda: jax.grad(lambda a: jnp.sum(
+        quartet_linear(a, w, jnp.uint32(42), QUARTET_CONFIG) ** 2))(x)
+    np.testing.assert_array_equal(np.asarray(f()), np.asarray(f()))
+
+
+def test_vmap_over_experts():
+    """MoE uses vmap(quartet_linear) over stacked expert weights."""
+    x = jax.random.normal(KEY, (4, 32, 64))
+    w = jax.random.normal(jax.random.PRNGKey(4), (4, 64, 32)) * 0.1
+    y = jax.vmap(lambda a, b: quartet_linear(a, b, jnp.uint32(1),
+                                             QUARTET_CONFIG))(x, w)
+    assert y.shape == (4, 32, 32)
+    g = jax.grad(lambda ww: jnp.sum(jax.vmap(
+        lambda a, b: quartet_linear(a, b, jnp.uint32(1), QUARTET_CONFIG)
+    )(x, ww) ** 2))(w)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+@pytest.mark.parametrize("method", ["luq_int4", "luq_fp4", "jetfire_fp4",
+                                    "halo_fp4", "lss_int4"])
+def test_baselines_run_and_differentiable(method):
+    from repro.core.baselines import baseline_linear
+    x, w = _xw(m=64, k=128, n=64)
+    g = jax.grad(lambda a, b: jnp.sum(
+        baseline_linear(a, b, jnp.uint32(2), method) ** 2), (0, 1))(x, w)
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in g)
+    assert float(jnp.linalg.norm(g[0])) > 0
