@@ -14,6 +14,7 @@ def main() -> None:
         fig2_gradient_alignment,
         fig3_kernel_speedups,
         roofline_report,
+        serve_throughput,
         table2_quantizer_metrics,
         table3_method_comparison,
         table7_ptq_vs_native,
@@ -28,6 +29,7 @@ def main() -> None:
         ("table7", table7_ptq_vs_native.run),
         ("ablation", ablation_formats.run),
         ("roofline", roofline_report.run),
+        ("serve", serve_throughput.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

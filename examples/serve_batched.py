@@ -1,8 +1,15 @@
-"""Serving example (deliverable b): batched prefill + incremental decode with
-the per-family cache engine, for any architecture.
+"""Serving example: the continuous-batching engine on mixed prompt lengths
+with staggered arrivals, for any architecture family.
 
-  PYTHONPATH=src python examples/serve_batched.py --arch falcon-mamba-7b
-  PYTHONPATH=src python examples/serve_batched.py --arch whisper-tiny
+  PYTHONPATH=src python examples/serve_batched.py                      # dense arch, FP4 KV pages
+  PYTHONPATH=src python examples/serve_batched.py --kv dense           # parity mode
+  PYTHONPATH=src python examples/serve_batched.py --arch falcon-mamba-7b   # SSM → dense slots
+
+Requests arrive over the first few engine steps (not all at once), prompts
+range from 6 to 30 tokens, and there are more requests than decode slots —
+so the run exercises queueing, chunked prefill riding alongside in-flight
+decodes, retirement, and slot/page recycling.  The dense-cache engine output
+is checked token-for-token against sequential ``greedy_generate``.
 """
 
 import argparse
@@ -10,58 +17,77 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.models import build_model
-from repro.train.serve import greedy_generate, init_cache, make_decode_step, make_prefill_step
+from repro.serve import Engine, EngineConfig
+from repro.train.serve import greedy_generate
+
+
+def make_extra(cfg, key):
+    if cfg.family == "encdec":
+        return {"source_embeds": jax.random.normal(
+            key, (1, cfg.max_source_len, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "vlm":
+        return {"image_embeds": jax.random.normal(
+            key, (1, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)}
+    return None
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--kv", default="mxfp4", choices=["mxfp4", "dense"])
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    rng = np.random.default_rng(0)
+    extra = make_extra(cfg, key)
 
-    extra = None
-    if cfg.family == "encdec":
-        extra = {"source_embeds": jax.random.normal(
-            key, (args.batch, cfg.max_source_len, cfg.d_model), jnp.bfloat16)}
-    if cfg.family == "vlm":
-        extra = {"image_embeds": jax.random.normal(
-            key, (args.batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)}
+    engine = Engine(model, params, EngineConfig(
+        n_slots=args.slots, max_len=48, page_size=8, kv_dtype=args.kv,
+        prefill_chunk=8))
 
-    # explicit prefill/decode (what a serving loop does per request batch)
-    prefill = jax.jit(make_prefill_step(model))
-    decode = jax.jit(make_decode_step(model))
-    caches = init_cache(model, args.batch, args.prompt_len + args.max_new)
+    # mixed prompt lengths, arrivals staggered over the first steps
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(6, 31)))
+               .astype(np.int32) for _ in range(args.requests)]
+    arrive_at_step = sorted(int(rng.integers(0, 4)) for _ in range(args.requests))
+
     t0 = time.time()
-    logits, caches, pos = prefill(params, prompt, caches, extra)
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    for _ in range(args.max_new - 1):
-        logits, caches, pos = decode(params, tok, pos, caches)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    out = jnp.concatenate(generated, axis=1)
-    out.block_until_ready()
+    handles, next_req = [], 0
+    while next_req < len(prompts) or engine.sched.pending:
+        while next_req < len(prompts) and arrive_at_step[next_req] <= engine.steps:
+            handles.append(engine.submit(prompts[next_req], args.max_new,
+                                         extra=extra, arrival_time=float(engine.steps)))
+            next_req += 1
+        info = engine.step(now=float(engine.steps))
+        print(f"step {info['step']:3d}: queued={info['queued']} "
+              f"prefill={info['prefilling']} decode={info['decoding']}")
     dt = time.time() - t0
-    print(f"{cfg.name}: prefill({args.batch}×{args.prompt_len}) + "
-          f"{args.max_new} decode steps in {dt:.2f}s "
-          f"→ {args.batch * args.max_new / dt:.1f} tok/s (CPU, reduced config)")
-    print("sample:", out[0])
 
-    # one-call wrapper used by tests
-    out2 = greedy_generate(model, params, prompt, max_new=4,
-                           max_len=args.prompt_len + 4, extra=extra)
-    print("greedy_generate:", out2.shape)
+    total = sum(len(h.tokens) for h in handles)
+    print(f"\n{cfg.name} [{cfg.family}] kv={args.kv if engine.paged else 'dense-slots'}: "
+          f"{len(handles)} requests ({min(p.size for p in prompts)}–"
+          f"{max(p.size for p in prompts)} prompt tokens) → {total} tokens "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s)")
+    print(f"cache bytes: {engine.cache_bytes():,}")
+    for h in handles[:3]:
+        print(f"  req {h.rid}: prompt[{h.prompt_len}] -> {h.tokens}")
+
+    if args.kv == "dense" or not engine.paged:
+        ok = all(
+            h.tokens == greedy_generate(
+                model, params, jnp.asarray(h.prompt)[None], max_new=args.max_new,
+                max_len=h.prompt_len + args.max_new, extra=extra)[0].tolist()
+            for h in handles)
+        print("token-for-token parity vs sequential greedy_generate:", ok)
 
 
 if __name__ == "__main__":

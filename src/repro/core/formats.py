@@ -224,9 +224,32 @@ def rtn_to_grid(x: jnp.ndarray, grid: jnp.ndarray) -> jnp.ndarray:
     return grid[idx]
 
 
+_HAS_NATIVE_E2M1 = hasattr(jnp, "float4_e2m1fn")
+
+
 def rtn_e2m1(x: jnp.ndarray) -> jnp.ndarray:
-    """Hardware-exact E2M1 RTN (ties-to-even, saturating) via the native dtype."""
-    return x.astype(jnp.float4_e2m1fn).astype(jnp.float32)
+    """Hardware-exact E2M1 RTN (ties-to-even, saturating).
+
+    Uses the native ``float4_e2m1fn`` cast when this JAX exposes it; otherwise
+    an arithmetic fallback with identical semantics: saturate to ±6, then
+    round the mantissa to 1 bit per binade with ``jnp.round`` (which is
+    round-half-to-even, matching IEEE).  Subnormals (|x| < 1) live on the
+    uniform {0, 0.5, 1} grid, so a single half-unit round covers them.  The
+    fallback is pure arithmetic (no gathers), so it also lowers inside Pallas
+    kernel bodies.
+    """
+    if _HAS_NATIVE_E2M1:
+        return x.astype(jnp.float4_e2m1fn).astype(jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    a = jnp.clip(jnp.abs(x), 0.0, 6.0)
+    # normals (1 <= a <= 6): a = m * 2^e with m in [1, 2), e in {0, 1, 2};
+    # one mantissa bit => grid step 2^e / 2
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(a, 1.0))), 0.0, 2.0)
+    pw = exp2i(e)
+    q_norm = jnp.round(a / pw * 2.0) * 0.5 * pw
+    q_sub = jnp.round(a * 2.0) * 0.5  # {0, 0.5, 1} uniform region
+    q = jnp.where(a >= 1.0, q_norm, q_sub)
+    return jnp.sign(x) * q
 
 
 def stochastic_round_to_grid(
@@ -253,6 +276,55 @@ def stochastic_round_to_grid(
     p_up = jnp.clip((a - lo) / gap, 0.0, 1.0)
     mag = jnp.where(u < p_up, hi, lo)
     return jnp.sign(x) * mag
+
+
+# ---------------------------------------------------------------------------
+# E2M1 nibble codes (storage format: two elements per byte)
+# ---------------------------------------------------------------------------
+
+# Positive E2M1 half-grid in code order: index i encodes sign·_E2M1_POS[i&7],
+# bit 3 is the sign — the standard FP4 bit layout (S EE M).
+_E2M1_POS_F32 = np.asarray(_E2M1_POS, dtype=np.float32)
+
+
+def e2m1_to_nibble(q: jnp.ndarray) -> jnp.ndarray:
+    """On-grid E2M1 values (scale 1) → 4-bit codes 0..15 (uint8).
+
+    Pure arithmetic (no searchsorted): for |q| ≥ 1 the magnitude index is
+    2 + 2·e + m with e = floor(log2|q|) and m the half-step mantissa bit;
+    below 1 the grid is uniform at 0.5.  Negative zero maps to code 0.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    a = jnp.abs(q)
+    e = jnp.clip(jnp.floor(jnp.log2(jnp.maximum(a, 1.0))), 0.0, 2.0)
+    m = a / exp2i(e) * 2.0 - 2.0  # 0 or 1 for on-grid normals
+    idx_norm = 2.0 + 2.0 * e + m
+    idx = jnp.where(a >= 1.0, idx_norm, a * 2.0)
+    sign = (q < 0).astype(jnp.uint8) << 3
+    return idx.astype(jnp.uint8) | sign
+
+
+def nibble_to_e2m1(codes: jnp.ndarray) -> jnp.ndarray:
+    """4-bit codes 0..15 (uint8) → f32 E2M1 grid values."""
+    mag = jnp.asarray(_E2M1_POS_F32)[(codes & 7).astype(jnp.int32)]
+    return jnp.where((codes & 8) > 0, -mag, mag)
+
+
+def pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """uint8 codes 0..15 [..., K] → packed uint8 [..., K/2] (even elem = high
+    nibble).  K must be even."""
+    k = codes.shape[-1]
+    if k % 2 != 0:
+        raise ValueError(f"last dim {k} not even")
+    pairs = codes.reshape(*codes.shape[:-1], k // 2, 2)
+    return (pairs[..., 0] << 4) | (pairs[..., 1] & 0xF)
+
+
+def unpack_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """packed uint8 [..., K/2] → uint8 codes 0..15 [..., K]."""
+    hi = (packed >> 4) & 0xF
+    lo = packed & 0xF
+    return jnp.stack([hi, lo], axis=-1).reshape(*packed.shape[:-1], -1)
 
 
 # ---------------------------------------------------------------------------

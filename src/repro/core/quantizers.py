@@ -175,6 +175,52 @@ def pma_gamma(fmt: Format) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Packed MXFP4 persistent-state quantization (serving KV cache)
+# ---------------------------------------------------------------------------
+
+
+class PackedQuant(NamedTuple):
+    """Storage-realistic MXFP4 payload: 4.25 bits/element.
+
+    ``codes``  — uint8, two E2M1 nibble codes per byte, [..., K/2]
+    ``scales`` — uint8 E8M0 biased-exponent codes, [..., K/block]
+    """
+
+    codes: jnp.ndarray
+    scales: jnp.ndarray
+
+
+def kv_quantize(x: jnp.ndarray, fmt: Format = F.MXFP4,
+                scale_mode: str = "nearest") -> PackedQuant:
+    """Quantize-on-write for persistent state (KV cache pages).
+
+    Same block-scaling rule as :func:`rtn_absmax` (per-block AbsMax → E8M0
+    scale → E2M1 RTN) but returns the *packed* storage payload rather than
+    dequantized values: nibble codes (2/byte) + uint8 scale exponents.
+    The last axis is the block axis; ``x.shape[-1]`` must divide by
+    ``fmt.block`` (or equal a smaller power-of-two block, handled by the
+    caller via ``dataclasses.replace(fmt, block=...)``).
+    """
+    block = fmt.block if fmt.block > 0 else x.shape[-1]
+    scales = F.quantize_scale(_block_scales(x, fmt, "absmax"), fmt, scale_mode)
+    xb = F.to_blocks(jnp.asarray(x, jnp.float32), block)
+    q = F.rtn_e2m1(jnp.clip(xb / scales[..., None], -fmt.max_value, fmt.max_value))
+    codes = F.pack_nibbles(F.from_blocks(F.e2m1_to_nibble(q)))
+    return PackedQuant(codes, F.scale_to_e8m0_code(scales))
+
+
+def kv_dequantize(pq: PackedQuant, fmt: Format = F.MXFP4,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize-on-read: packed nibbles × E8M0 block scales → values."""
+    vals = F.nibble_to_e2m1(F.unpack_nibbles(pq.codes))
+    k = vals.shape[-1]
+    block = fmt.block if fmt.block > 0 else k
+    scales = F.e8m0_code_to_scale(pq.scales)
+    vb = F.to_blocks(vals, block) * scales[..., None]
+    return F.from_blocks(vb).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # LSQ (learned step size; used by the method-comparison harness)
 # ---------------------------------------------------------------------------
 

@@ -47,16 +47,21 @@ def _axis_size(mesh: Mesh, axes) -> int:
 
 
 def _fit(mesh: Mesh, dim: int, axes):
-    """Return ``axes`` if it divides ``dim``, else progressively shrink."""
+    """Return ``axes`` if it divides ``dim``, else progressively shrink.
+
+    Preserves the caller's form — a string stays a string, a tuple stays a
+    tuple: jax 0.4.x PartitionSpec equality is structural (``('data',)`` !=
+    ``'data'``), and the rule tests pin the tuple form for FSDP axes."""
     if axes is None:
         return None
-    if isinstance(axes, str):
+    was_str = isinstance(axes, str)
+    if was_str:
         axes = (axes,)
     while axes and dim % _axis_size(mesh, axes) != 0:
         axes = axes[:-1]
     if not axes:
         return None
-    return axes if len(axes) > 1 else axes[0]
+    return axes[0] if was_str else tuple(axes)
 
 
 # --- rule table: (path regex, spec builder over trailing dims) ---------------

@@ -62,7 +62,7 @@ def _hadamard_quest_kernel(x_ref, h_ref, codes_ref, scales_ref, mask_ref, *, cli
     # (4) E2M1 RTN downcast (hardware-exact, saturating) + mask (5)
     v = xh / scale
     mask = jnp.abs(v) <= _E2M1_MAX
-    q = jnp.clip(v, -_E2M1_MAX, _E2M1_MAX).astype(jnp.float4_e2m1fn).astype(jnp.float32)
+    q = F.rtn_e2m1(jnp.clip(v, -_E2M1_MAX, _E2M1_MAX))
 
     codes_ref[...] = jnp.round(q * 2.0).astype(jnp.int8).reshape(bm, bk)
     scales_ref[...] = scale.reshape(bm, ng)

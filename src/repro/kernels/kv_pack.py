@@ -1,0 +1,150 @@
+"""Pallas kernels for the serving engine's FP4 KV-cache pages.
+
+Quantize-on-write / dequantize-on-read for persistent decode state: one
+VMEM-resident pass per KV page fuses
+
+  1. per-32-group AbsMax scale computation,
+  2. E8M0 (nearest power-of-two) scale rounding → biased-exponent uint8,
+  3. E2M1 round-to-nearest downcast (arithmetic ties-to-even — lowers inside
+     the kernel body with no gathers),
+  4. nibble packing: two 4-bit codes per byte (S EE M bit layout),
+
+writing the *real* 4.25-bit payload (codes + scale exponents) back to HBM.
+The unpack kernel inverts arithmetically: magnitude = 2^((i-2)>>1)·(1+m/2)
+for normal codes, i/2 for the subnormal region — no table gathers, so both
+bodies map onto the VPU.  Semantics are verified against the jnp reference
+pair ``core.quantizers.kv_quantize`` / ``kv_dequantize`` in
+tests/test_serve_engine.py (bit-identical payloads).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import formats as F
+
+GROUP = 32
+_E2M1_MAX = 6.0
+
+
+def _exp2i(e: jnp.ndarray) -> jnp.ndarray:
+    bits = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _kv_quant_pack_kernel(x_ref, codes_ref, scales_ref):
+    """One [bm, bk] tile → packed nibbles [bm, bk/2] + E8M0 codes [bm, bk/32]."""
+    x = x_ref[...].astype(jnp.float32)
+    bm, bk = x.shape
+    ng = bk // GROUP
+
+    # (1) AbsMax per 32-group, (2) nearest power-of-two exponent
+    amax = jnp.max(jnp.abs(x.reshape(bm, ng, GROUP)), axis=-1)
+    e = jnp.round(jnp.log2(jnp.maximum(amax / _E2M1_MAX, 2.0**-126)))
+    e = jnp.clip(e, -126.0, 127.0)
+    scale = _exp2i(e)
+
+    # (3) E2M1 RTN (saturating, ties-to-even)
+    v = x.reshape(bm, ng, GROUP) / scale[..., None]
+    q = F.rtn_e2m1(jnp.clip(v, -_E2M1_MAX, _E2M1_MAX))
+
+    # (4) arithmetic nibble encode + pack pairs into bytes
+    nib = F.e2m1_to_nibble(q).reshape(bm, bk // 2, 2)
+    codes_ref[...] = (nib[..., 0] << 4) | (nib[..., 1] & 0xF)
+    scales_ref[...] = (e + 127.0).astype(jnp.uint8)
+
+
+def _kv_dequant_unpack_kernel(codes_ref, scales_ref, o_ref):
+    """Packed [bm, bk/2] + scale codes [bm, bk/32] → f32 values [bm, bk]."""
+    packed = codes_ref[...]
+    bm = packed.shape[0]
+    bk = packed.shape[1] * 2
+    ng = bk // GROUP
+
+    nib = jnp.stack([(packed >> 4) & 0xF, packed & 0xF], axis=-1).reshape(bm, bk)
+    idx = (nib & 7).astype(jnp.float32)
+    mag_norm = _exp2i(jnp.floor((idx - 2.0) / 2.0)) * (1.0 + 0.5 * (idx % 2.0))
+    mag = jnp.where(idx >= 2.0, mag_norm, idx * 0.5)
+    val = jnp.where((nib & 8) > 0, -mag, mag)
+
+    scale = _exp2i(scales_ref[...].astype(jnp.float32) - 127.0)
+    o_ref[...] = (val.reshape(bm, ng, GROUP) * scale[..., None]).reshape(bm, bk)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def kv_quant_pack(
+    x: jnp.ndarray,
+    block_m: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+):
+    """x: [M, K] → (packed codes uint8 [M, K/2], E8M0 scale codes uint8 [M, K/32])."""
+    m, k = x.shape
+    if k % GROUP != 0:
+        raise ValueError(f"K={k} not divisible by group {GROUP}")
+    bk = min(block_k, k)
+    while k % bk != 0:
+        bk -= GROUP
+    bm = min(block_m, m)
+    grid_m = pl.cdiv(m, bm)
+    pad_m = grid_m * bm - m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+
+    codes, scales = pl.pallas_call(
+        _kv_quant_pack_kernel,
+        grid=(grid_m, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bk // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // GROUP), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid_m * bm, k // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((grid_m * bm, k // GROUP), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(x)
+    if pad_m:
+        codes, scales = codes[:m], scales[:m]
+    return codes, scales
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def kv_dequant_unpack(
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    block_m: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(packed codes [M, K/2], scale codes [M, K/32]) → f32 values [M, K]."""
+    m, kh = codes.shape
+    k = kh * 2
+    assert scales.shape == (m, k // GROUP), (codes.shape, scales.shape)
+    bk = min(block_k, k)
+    while k % bk != 0:
+        bk -= GROUP
+    bm = min(block_m, m)
+    grid_m = pl.cdiv(m, bm)
+    pad_m = grid_m * bm - m
+    if pad_m:
+        codes = jnp.pad(codes, ((0, pad_m), (0, 0)))
+        scales = jnp.pad(scales, ((0, pad_m), (0, 0)))
+
+    out = pl.pallas_call(
+        _kv_dequant_unpack_kernel,
+        grid=(grid_m, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk // GROUP), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid_m * bm, k), jnp.float32),
+        interpret=interpret,
+    )(codes, scales)
+    return out[:m] if pad_m else out

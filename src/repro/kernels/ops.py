@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.hadamard_quant import hadamard_quest_quantize as _hq_fn
+from repro.kernels.kv_pack import kv_dequant_unpack as _kvd_fn
+from repro.kernels.kv_pack import kv_quant_pack as _kvq_fn
 from repro.kernels.mxfp4_matmul import mxfp4_matmul as _mm_fn
 from repro.kernels.sr_hadamard_quant import sr_hadamard_quantize as _sr_fn
 
@@ -50,6 +52,24 @@ def sr_hadamard_quantize(
     u = fastrng.uniform(seed, x2.shape, salt)
     codes, scales = _sr_fn(x2, signs, u, prescale=prescale, interpret=INTERPRET)
     return codes.reshape(*lead, -1), scales.reshape(*lead, -1)
+
+
+def kv_quant_pack(x: jnp.ndarray):
+    """[..., K] → (packed codes uint8 [..., K/2], E8M0 scale codes [..., K/32]).
+
+    The serving PagedCache's quantize-on-write primitive (4.25 bits/element);
+    bit-identical to ``core.quantizers.kv_quantize``."""
+    x2, lead = _as2d(x)
+    codes, scales = _kvq_fn(x2, interpret=INTERPRET)
+    return codes.reshape(*lead, -1), scales.reshape(*lead, -1)
+
+
+def kv_dequant_unpack(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """(packed codes [..., K/2], scale codes [..., K/32]) → f32 values [..., K]."""
+    c2, lead = _as2d(codes)
+    s2, _ = _as2d(scales)
+    out = _kvd_fn(c2, s2, interpret=INTERPRET)
+    return out.reshape(*lead, -1)
 
 
 def mxfp4_matmul(a_codes, a_scales, b_codes, b_scales) -> jnp.ndarray:

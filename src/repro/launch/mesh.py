@@ -8,19 +8,25 @@ multi-pod = 2×16×16 = 512 chips with a leading "pod" axis (DCI-connected).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+
+    def _mk(shape, axes):
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # jax 0.4.x: no AxisType / axis_types kwarg — plain mesh
+    def _mk(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mk(shape, axes)
 
 
 def make_local_mesh(model: int = 1):
     """Smoke-test mesh over whatever devices exist (usually 1 CPU device)."""
     n = len(jax.devices())
     data = max(n // model, 1)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mk((data, model), ("data", "model"))

@@ -246,6 +246,8 @@ def analyze_compiled(compiled, model_flops_per_step: float | None = None,
     agg = aggregate(comps, entry)
     out = {**agg, **roofline_terms(agg)}
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     out["xla_cost_flops_unscaled"] = ca.get("flops", 0.0)
     ma = compiled.memory_analysis()
     out["bytes_per_device"] = {

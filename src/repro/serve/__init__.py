@@ -1,0 +1,15 @@
+"""Continuous-batching serving engine with a paged (optionally MXFP4) KV cache."""
+
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.paged_cache import DenseSlotCache, PagedCache
+from repro.serve.scheduler import Request, RequestState, Scheduler
+
+__all__ = [
+    "Engine",
+    "EngineConfig",
+    "PagedCache",
+    "DenseSlotCache",
+    "Request",
+    "RequestState",
+    "Scheduler",
+]

@@ -1,0 +1,250 @@
+"""Continuous-batching inference engine.
+
+``Engine`` multiplexes many generation requests over a fixed set of decode
+slots:
+
+* ``submit(prompt, max_new) -> Request`` queues work (the returned object is
+  the handle; ``.tokens`` fills in as the engine runs),
+* ``step()`` advances the world by one scheduler tick: admit queued requests
+  into free slots, run one chunked-prefill call per prefilling request, then
+  step every decoding slot in **one** jitted decode call,
+* ``drain()`` steps until nothing is queued or active.
+
+Model families with positional attention KV (``dense``/``moe``) store their
+cache in :class:`PagedCache` pages — optionally MXFP4-packed (4.25
+bits/element) with quantize-on-write / dequantize-on-read.  Other families
+(SSM recurrent state, hybrid, enc-dec / VLM cross-KV) fall back to
+:class:`DenseSlotCache` but schedule identically.
+
+Both paths reuse the same step builders as ``train.serve.greedy_generate``
+(``make_chunk_prefill_step`` / ``make_decode_step``), so engine outputs are
+token-for-token those of the reference loop in dense-cache mode.  Exactly
+three shapes compile per engine: the ``[n_slots]`` decode, the
+``[1, prefill_chunk]`` prefill chunk, and the ``[1, 1]`` remainder chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+from repro.serve import paged_cache as P
+from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.train.serve import make_chunk_prefill_step, make_decode_step
+
+PAGED_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4
+    max_len: int = 128  # per-slot token capacity (prompt + generation)
+    page_size: int = 16  # paged families only
+    kv_dtype: str = "mxfp4"  # "mxfp4" | "dense" (paged families only)
+    prefill_chunk: int = 16
+    method: str = "quartet"
+    eos_id: int | None = None
+    keep_logits: bool = False  # record per-step logits on each Request (tests)
+
+
+class Engine:
+    def __init__(self, model: Model, params, config: EngineConfig | None = None):
+        self.model, self.params = model, params
+        self.config = cfg = config or EngineConfig()
+        self.paged = model.cfg.family in PAGED_FAMILIES
+        self.sched = Scheduler(cfg.n_slots, cfg.max_len, cfg.prefill_chunk)
+        self.completed: list[Request] = []
+        self._dtype = jnp.dtype(model.cfg.dtype)
+        self.steps = 0
+
+        if self.paged:
+            pages_per_slot = -(-cfg.max_len // cfg.page_size)
+            self.cache = P.PagedCache(
+                model, n_slots=cfg.n_slots, pages_per_slot=pages_per_slot,
+                page_size=cfg.page_size, kv_dtype=cfg.kv_dtype)
+        else:
+            self.cache = P.DenseSlotCache(model, n_slots=cfg.n_slots,
+                                          max_len=cfg.max_len)
+
+        decode = make_decode_step(model, method=cfg.method)
+        chunk = make_chunk_prefill_step(model, method=cfg.method)
+        ps = cfg.page_size
+
+        if self.paged:
+
+            def decode_all(params, tokens, positions, pool, tables, mask):
+                """One decode step for every slot; masked lanes write to the
+                scratch page and their (meaningless) logits are discarded."""
+                pos_safe = jnp.where(mask, positions, 0)
+                kv = P.gather_pages(pool, tables, self._dtype)
+                logits, (k2, v2), _ = decode(params, tokens, pos_safe, kv)
+                bidx = jnp.arange(tokens.shape[0])
+                k_new = k2[:, bidx, pos_safe]  # [L, B, Hkv, hd]
+                v_new = v2[:, bidx, pos_safe]
+                page_ids = tables[bidx, pos_safe // ps]
+                page_ids = jnp.where(mask, page_ids, 0)
+                pool = P.scatter_tokens(pool, page_ids, pos_safe % ps, k_new, v_new)
+                return logits, pool
+
+            def prefill_chunk(params, tokens, start, table_row, pool, extra=None):
+                """tokens [1, C] at absolute positions start..start+C for the
+                slot mapped by ``table_row`` → (last-token logits, pool)."""
+                kv = P.gather_pages(pool, table_row[None], self._dtype)
+                logits, (k2, v2), _ = chunk(
+                    params, tokens, jnp.full((1,), start, jnp.int32), kv, extra)
+                C = tokens.shape[1]
+                k_c = jax.lax.dynamic_slice_in_dim(k2, start, C, axis=2)[:, 0]
+                v_c = jax.lax.dynamic_slice_in_dim(v2, start, C, axis=2)[:, 0]
+                pos = start + jnp.arange(C)
+                pool = P.scatter_tokens(pool, table_row[pos // ps], pos % ps, k_c, v_c)
+                return logits, pool
+
+            self._decode_all = jax.jit(decode_all)
+            self._prefill_chunk = jax.jit(prefill_chunk)
+        else:
+
+            def decode_all(params, tokens, positions, caches, mask):
+                pos_safe = jnp.where(mask, positions, 0)
+                logits, new_caches, _ = decode(params, tokens, pos_safe, caches)
+                return logits, P.merge_masked(caches, new_caches, mask)
+
+            def prefill_chunk(params, tokens, start, slot, caches, extra=None):
+                sub = P.slice_slot(caches, slot)
+                logits, new_sub, _ = chunk(
+                    params, tokens, jnp.full((1,), start, jnp.int32), sub, extra)
+                return logits, P.write_slot(caches, new_sub, slot)
+
+            self._decode_all = jax.jit(decode_all)
+            self._prefill_chunk = jax.jit(prefill_chunk)
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt, max_new: int, extra: Any = None,
+               arrival_time: float | None = None) -> Request:
+        now = time.monotonic() if arrival_time is None else arrival_time
+        return self.sched.submit(prompt, max_new, extra=extra, arrival_time=now)
+
+    def step(self, now: float | None = None) -> dict:
+        """One scheduler tick: admit → chunked prefill → batched decode →
+        retire.  Returns a small summary dict (counts) for driver loops."""
+        now = time.monotonic() if now is None else now
+        cfg = self.config
+
+        # -- admit ---------------------------------------------------------
+        def can_admit(req: Request) -> bool:
+            if not self.paged:
+                return True
+            return self.cache.can_alloc(req.prompt_len + req.max_new)
+
+        admitted = self.sched.admit(can_admit)
+        for req in admitted:
+            if self.paged:
+                self.cache.alloc(req.slot, req.prompt_len + req.max_new)
+            else:
+                self.cache.reset_slot(req.slot)
+
+        # -- chunked prefill (one chunk per prefilling request per tick) ----
+        for req in self.sched.prefilling():
+            self._advance_prefill(req, now)
+
+        # -- one batched decode over all decoding slots ---------------------
+        decoding = self.sched.decoding()
+        if decoding:
+            self._decode_tick(decoding, now)
+
+        self.steps += 1
+        return {"admitted": len(admitted), "prefilling": len(self.sched.prefilling()),
+                "decoding": len(self.sched.decoding()),
+                "queued": len(self.sched.queue), "step": self.steps}
+
+    def drain(self, max_steps: int = 100_000) -> list[Request]:
+        """Step until every submitted request has finished."""
+        while self.sched.pending:
+            self.step()
+            if self.steps > max_steps:
+                raise RuntimeError("drain exceeded max_steps — engine wedged?")
+        return self.completed
+
+    def cache_bytes(self) -> int:
+        return self.cache.cache_bytes()
+
+    # ------------------------------------------------------------- internals
+
+    def _run_prefill_call(self, req: Request, tokens_np: np.ndarray):
+        start = jnp.int32(req.prefill_pos)
+        tokens = jnp.asarray(tokens_np[None, :], jnp.int32)
+        if self.paged:
+            table_row = jnp.asarray(self.cache.tables[req.slot])
+            logits, self.cache.pool = self._prefill_chunk(
+                self.params, tokens, start, table_row, self.cache.pool, req.extra)
+        else:
+            logits, self.cache.caches = self._prefill_chunk(
+                self.params, tokens, start, jnp.int32(req.slot),
+                self.cache.caches, req.extra)
+        req.prefill_pos += tokens_np.shape[0]
+        return logits
+
+    def _advance_prefill(self, req: Request, now: float) -> None:
+        C = self.config.prefill_chunk
+        remaining = req.prompt_len - req.prefill_pos
+        if remaining >= C:
+            logits = self._run_prefill_call(
+                req, req.prompt[req.prefill_pos:req.prefill_pos + C])
+        else:
+            # remainder (< C tokens): single-token chunks — never pad, so SSM
+            # recurrences and MoE routing only ever see real tokens
+            for _ in range(remaining):
+                logits = self._run_prefill_call(
+                    req, req.prompt[req.prefill_pos:req.prefill_pos + 1])
+        if req.prefill_pos == req.prompt_len:
+            tok = int(jnp.argmax(logits[0]))
+            if self.config.keep_logits:
+                req.logits_trace.append(np.asarray(logits[0], np.float32))
+            req.tokens.append(tok)
+            req.first_token_time = now
+            req.state = RequestState.DECODE
+            self._maybe_finish(req, now)
+
+    def _decode_tick(self, decoding: list[Request], now: float) -> None:
+        B = self.config.n_slots
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
+        for req in decoding:
+            tokens[req.slot, 0] = req.tokens[-1]
+            positions[req.slot] = req.prompt_len + len(req.tokens) - 1
+            mask[req.slot] = True
+        args = (self.params, jnp.asarray(tokens), jnp.asarray(positions))
+        if self.paged:
+            logits, self.cache.pool = self._decode_all(
+                *args, self.cache.pool, jnp.asarray(self.cache.tables),
+                jnp.asarray(mask))
+        else:
+            logits, self.cache.caches = self._decode_all(
+                *args, self.cache.caches, jnp.asarray(mask))
+        logits_np = np.asarray(logits, np.float32)
+        for req in decoding:
+            tok = int(np.argmax(logits_np[req.slot]))
+            if self.config.keep_logits:
+                req.logits_trace.append(logits_np[req.slot])
+            req.tokens.append(tok)
+            self._maybe_finish(req, now)
+
+    def _maybe_finish(self, req: Request, now: float) -> None:
+        eos = self.config.eos_id
+        reason = None
+        if eos is not None and req.tokens and req.tokens[-1] == eos:
+            reason = "eos"
+        elif len(req.tokens) >= req.max_new:
+            reason = "max_tokens"
+        if reason is not None:
+            self.sched.retire(req, reason, now)
+            if self.paged:
+                self.cache.free(req.slot)
+            self.completed.append(req)

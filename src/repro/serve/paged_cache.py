@@ -1,0 +1,254 @@
+"""Paged KV storage for the continuous-batching engine.
+
+Two cache backends behind one interface:
+
+* :class:`PagedCache` — attention-KV families (``dense``/``moe``): a global
+  pool of fixed-size pages ``[L, n_pages, page_size, Hkv, hd]`` with a host-
+  side free-list allocator and per-slot page tables.  In ``kv_dtype="mxfp4"``
+  mode pages hold the *real* 4.25-bit payload (packed E2M1 nibble codes +
+  E8M0 scale-exponent bytes, via ``core.quantizers.kv_quantize``); the
+  ``"dense"`` mode stores the model compute dtype for parity testing.
+  Quantize happens once per token on write; gather dequantizes pages into the
+  stacked dense cache layout the model's decode step already consumes.
+
+* :class:`DenseSlotCache` — families whose decode state is not positional KV
+  (SSM conv+ssm states, hybrid, enc-dec / VLM cross caches): one dense cache
+  slot per sequence, preallocated at ``max_len``, with per-slot slice /
+  write-back / reset helpers.  These schedule identically; they just don't
+  page.
+
+Page id 0 is reserved as a scratch page: masked (inactive) decode lanes
+redirect their writes there, so one jitted decode step can cover every slot
+without corrupting sequences that are still prefilling.  Stale page contents
+are never zeroed — causal attention masks every position greater than the
+querying token's, and a sequence writes position ``p`` before any of its
+queries reach ``p``, so garbage is unreachable by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import quantizers as Q
+from repro.models.registry import Model
+
+GROUP = 32
+
+
+# ---------------------------------------------------------------------------
+# pure (jit-traceable) pool ops
+# ---------------------------------------------------------------------------
+
+
+def _quant_fmt(hd: int) -> F.Format:
+    """MXFP4 with the block clamped to the head dim (blocks never straddle
+    heads; reduced configs use hd=32, full configs 128 — both divide)."""
+    block = GROUP if hd % GROUP == 0 else hd
+    return dataclasses.replace(F.MXFP4, block=block)
+
+
+def quantize_kv(x: jnp.ndarray) -> Q.PackedQuant:
+    """[..., hd] values → packed MXFP4 payload (codes [..., hd/2] u8,
+    scale codes [..., hd/block] u8)."""
+    return Q.kv_quantize(x, _quant_fmt(x.shape[-1]))
+
+
+def dequantize_kv(codes: jnp.ndarray, scales: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Packed payload → [..., hd] values in the model compute dtype."""
+    hd = codes.shape[-1] * 2
+    return Q.kv_dequantize(Q.PackedQuant(codes, scales), _quant_fmt(hd), dtype)
+
+
+def gather_pages(pool: dict, tables: jnp.ndarray, dtype) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """pool pages → dense stacked KV caches.
+
+    tables [B, n_pages_per_slot] int32 → (k, v) [L, B, T, Hkv, hd] with
+    T = n_pages_per_slot · page_size, dequantizing if the pool is packed.
+    """
+
+    def one(codes, scales=None):
+        g = codes[:, tables]  # [L, B, np, ps, H, hd?]
+        if scales is None:
+            return g.reshape(*g.shape[:2], -1, *g.shape[4:])
+        s = scales[:, tables]
+        vals = dequantize_kv(g, s, dtype)
+        return vals.reshape(*vals.shape[:2], -1, *vals.shape[4:])
+
+    if "k" in pool:  # dense mode
+        return one(pool["k"]), one(pool["v"])
+    return (one(pool["k_codes"], pool["k_scales"]),
+            one(pool["v_codes"], pool["v_scales"]))
+
+
+def scatter_tokens(pool: dict, page_ids: jnp.ndarray, offsets: jnp.ndarray,
+                   k_new: jnp.ndarray, v_new: jnp.ndarray) -> dict:
+    """Write one token per (page, offset) pair into the pool.
+
+    page_ids/offsets [N]; k_new/v_new [L, N, Hkv, hd].  Quantize-on-write in
+    packed mode.  Duplicate (page, offset) pairs (masked lanes redirected to
+    the scratch page) resolve arbitrarily — scratch contents are never read.
+    """
+    if "k" in pool:
+        k_store = k_new.astype(pool["k"].dtype)
+        v_store = v_new.astype(pool["v"].dtype)
+        return {
+            "k": pool["k"].at[:, page_ids, offsets].set(k_store),
+            "v": pool["v"].at[:, page_ids, offsets].set(v_store),
+        }
+    kq, vq = quantize_kv(k_new), quantize_kv(v_new)
+    return {
+        "k_codes": pool["k_codes"].at[:, page_ids, offsets].set(kq.codes),
+        "k_scales": pool["k_scales"].at[:, page_ids, offsets].set(kq.scales),
+        "v_codes": pool["v_codes"].at[:, page_ids, offsets].set(vq.codes),
+        "v_scales": pool["v_scales"].at[:, page_ids, offsets].set(vq.scales),
+    }
+
+
+# ---------------------------------------------------------------------------
+# PagedCache (attention-KV families)
+# ---------------------------------------------------------------------------
+
+
+class PagedCache:
+    """Fixed-size KV pages + free-list allocator + per-slot page tables.
+
+    Device state (``self.pool``) is a dict of jnp arrays and is only mutated
+    through the pure functions above (the engine threads it through its jitted
+    steps).  Allocator state (free list, page tables) is host-side numpy —
+    tables are passed into jitted functions as ordinary int32 operands.
+    """
+
+    def __init__(self, model: Model, *, n_slots: int, pages_per_slot: int,
+                 page_size: int, n_pages: int | None = None,
+                 kv_dtype: str = "mxfp4"):
+        cfg = model.cfg
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(f"PagedCache supports attention-KV families, got {cfg.family!r}")
+        if kv_dtype not in ("mxfp4", "dense"):
+            raise ValueError(f"kv_dtype must be 'mxfp4' or 'dense', got {kv_dtype!r}")
+        spec_k, _ = model.cache_spec(1, page_size)  # [L, 1, ps, Hkv, hd]
+        L, _, _, H, hd = spec_k.shape
+        if hd % 2 != 0:
+            raise ValueError(f"head dim {hd} must be even for nibble packing")
+        # page 0 is the reserved scratch page
+        n_pages = n_pages if n_pages is not None else 1 + n_slots * pages_per_slot
+        self.n_slots, self.page_size = n_slots, page_size
+        self.pages_per_slot, self.n_pages = pages_per_slot, n_pages
+        self.kv_dtype = kv_dtype
+        self.layers, self.kv_heads, self.head_dim = L, H, hd
+        self._dtype = jnp.dtype(cfg.dtype)
+        nb = hd // _quant_fmt(hd).block
+        if kv_dtype == "dense":
+            shape = (L, n_pages, page_size, H, hd)
+            self.pool = {"k": jnp.zeros(shape, self._dtype),
+                         "v": jnp.zeros(shape, self._dtype)}
+        else:
+            cshape = (L, n_pages, page_size, H, hd // 2)
+            sshape = (L, n_pages, page_size, H, nb)
+            self.pool = {"k_codes": jnp.zeros(cshape, jnp.uint8),
+                         "k_scales": jnp.zeros(sshape, jnp.uint8),
+                         "v_codes": jnp.zeros(cshape, jnp.uint8),
+                         "v_scales": jnp.zeros(sshape, jnp.uint8)}
+        self._free = list(range(n_pages - 1, 0, -1))  # pop() hands out low ids first
+        self.tables = np.zeros((n_slots, pages_per_slot), np.int32)
+
+    # -- allocator ----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        n = self.pages_needed(n_tokens)
+        return n <= min(len(self._free), self.pages_per_slot)
+
+    def alloc(self, slot: int, n_tokens: int) -> None:
+        """Map enough pages onto ``slot`` to hold ``n_tokens`` positions."""
+        n = self.pages_needed(n_tokens)
+        if n > self.pages_per_slot:
+            raise ValueError(f"{n_tokens} tokens need {n} pages > pages_per_slot={self.pages_per_slot}")
+        if n > len(self._free):
+            raise RuntimeError(f"out of pages: need {n}, free {len(self._free)}")
+        self.tables[slot] = 0
+        for i in range(n):
+            self.tables[slot, i] = self._free.pop()
+
+    def free(self, slot: int) -> None:
+        for pid in self.tables[slot]:
+            if pid != 0:
+                self._free.append(int(pid))
+        self.tables[slot] = 0
+
+    # -- accounting ---------------------------------------------------------
+
+    def cache_bytes(self) -> int:
+        """Persistent KV bytes held by the pool (the number the FP4 mode
+        shrinks; transient gather buffers are working memory, not state)."""
+        return sum(int(a.nbytes) for a in self.pool.values())
+
+    def bits_per_element(self) -> float:
+        elems = self.layers * self.n_pages * self.page_size * self.kv_heads * self.head_dim * 2
+        return self.cache_bytes() * 8 / elems
+
+
+# ---------------------------------------------------------------------------
+# DenseSlotCache (SSM / hybrid / cross-KV fallback)
+# ---------------------------------------------------------------------------
+
+
+def slice_slot(caches: Any, slot: jnp.ndarray) -> Any:
+    """Select one slot's cache (batch axis 1 on every leaf) → batch-1 view."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1), caches)
+
+
+def write_slot(caches: Any, update: Any, slot: jnp.ndarray) -> Any:
+    """Write a batch-1 cache back into ``slot``."""
+    return jax.tree.map(
+        lambda a, u: jax.lax.dynamic_update_slice_in_dim(a, u.astype(a.dtype), slot, axis=1),
+        caches, update)
+
+
+def merge_masked(old: Any, new: Any, mask: jnp.ndarray) -> Any:
+    """Per-slot select: keep ``new`` where mask (batch axis 1), else ``old`` —
+    the one batched decode step leaves non-decoding slots untouched."""
+
+    def sel(o, n):
+        shape = [1] * o.ndim
+        shape[1] = mask.shape[0]
+        return jnp.where(mask.reshape(shape), n.astype(o.dtype), o)
+
+    return jax.tree.map(sel, old, new)
+
+
+class DenseSlotCache:
+    """Per-slot dense decode state for families without paged attention KV."""
+
+    def __init__(self, model: Model, *, n_slots: int, max_len: int):
+        self.n_slots, self.max_len = n_slots, max_len
+        spec = model.cache_spec(n_slots, max_len)
+        self.caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+        self._reset = jax.jit(self._reset_impl)
+
+    @staticmethod
+    def _reset_impl(caches, slot):
+        zero = jax.tree.map(
+            lambda a: jnp.zeros((a.shape[0], 1, *a.shape[2:]), a.dtype), caches)
+        return write_slot(caches, zero, slot)
+
+    def reset_slot(self, slot: int) -> None:
+        """Zero one slot's state before a new request prefills into it (SSM
+        recurrences have no positional masking to hide a predecessor's state)."""
+        self.caches = self._reset(self.caches, jnp.int32(slot))
+
+    def cache_bytes(self) -> int:
+        return sum(int(a.nbytes) for a in jax.tree.leaves(self.caches))

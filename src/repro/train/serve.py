@@ -25,21 +25,41 @@ def init_cache(model: Model, batch: int, max_len: int, zeros: bool = True):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
 
 
-def make_prefill_step(model: Model, *, method: str = "quartet") -> Callable:
+def _cast_params(params, compute_dtype):
+    return jax.tree.map(
+        lambda p: p.astype(compute_dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def make_chunk_prefill_step(model: Model, *, method: str = "quartet") -> Callable:
+    """Chunked prefill: process ``tokens [B, C]`` starting at absolute position
+    ``start [B]``, writing KV at ``start .. start+C`` — the building block both
+    the whole-prompt :func:`make_prefill_step` and the continuous-batching
+    engine's per-slot prefill share.  Cross caches (enc-dec / VLM) are
+    (re)built on every chunk — idempotent, since the source memory is fixed."""
     cfg = model.cfg
     compute_dtype = jnp.dtype(cfg.dtype)
 
+    def prefill_chunk(params, tokens, start, caches, extra=None):
+        """tokens [B, C], start [B] → (last_logits [B, V], caches, start+C)."""
+        cparams = _cast_params(params, compute_dtype)
+        B, C = tokens.shape
+        positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        logits, caches, _ = model.forward(
+            cparams, tokens, jnp.uint32(0), positions=positions, caches=caches,
+            cache_index=start, extra=extra, build_cross=True, method=method)
+        return logits[:, -1, :], caches, start + C
+
+    return prefill_chunk
+
+
+def make_prefill_step(model: Model, *, method: str = "quartet") -> Callable:
+    chunk = make_chunk_prefill_step(model, method=method)
+
     def prefill(params, tokens, caches, extra=None):
         """tokens [B, S] → (next_token_logits [B, V], caches, next_pos [B])."""
-        cparams = jax.tree.map(
-            lambda p: p.astype(compute_dtype)
-            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
-        B, S = tokens.shape
-        idx0 = jnp.zeros((B,), jnp.int32)
-        logits, caches, _ = model.forward(
-            cparams, tokens, jnp.uint32(0), caches=caches, cache_index=idx0,
-            extra=extra, build_cross=True, method=method)
-        return logits[:, -1, :], caches, jnp.full((B,), S, jnp.int32)
+        B, _ = tokens.shape
+        return chunk(params, tokens, jnp.zeros((B,), jnp.int32), caches, extra)
 
     return prefill
 
@@ -50,9 +70,7 @@ def make_decode_step(model: Model, *, method: str = "quartet") -> Callable:
 
     def decode(params, token, position, caches, extra=None):
         """token [B, 1], position [B] → (logits [B, V], caches, position+1)."""
-        cparams = jax.tree.map(
-            lambda p: p.astype(compute_dtype)
-            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        cparams = _cast_params(params, compute_dtype)
         positions = position[:, None]
         logits, caches, _ = model.forward(
             cparams, token, jnp.uint32(0), positions=positions, caches=caches,
@@ -65,11 +83,17 @@ def make_decode_step(model: Model, *, method: str = "quartet") -> Callable:
 def greedy_generate(model: Model, params, prompt: jnp.ndarray, max_new: int,
                     max_len: int, extra=None, method: str = "quartet"):
     """Reference generation loop (prefill → lax.scan of decode steps)."""
+    if max_new < 1:
+        raise ValueError(f"max_new must be >= 1, got {max_new}")
     prefill = make_prefill_step(model, method=method)
     decode = make_decode_step(model, method=method)
     caches = init_cache(model, prompt.shape[0], max_len)
     logits, caches, pos = prefill(params, prompt, caches, extra=extra)
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    if max_new == 1:
+        # the scan below would run 0 steps and return an empty [0, B] ys —
+        # the prefill-produced token IS the whole answer
+        return tok
 
     def body(carry, _):
         tok, pos, caches = carry

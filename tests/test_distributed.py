@@ -105,15 +105,14 @@ DRYRUN_SMOKE = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 import repro.launch.dryrun as DR
 
-# shrink the production mesh to 2x4 for the in-CI lowering
+# shrink the production mesh to 2x4 for the in-CI lowering (M._mk handles
+# the AxisType presence/absence across jax versions)
 import repro.launch.mesh as M
-M.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+M.make_production_mesh = lambda multi_pod=False: M._mk(
     (2, 2, 2) if multi_pod else (2, 4),
-    ("pod", "data", "model") if multi_pod else ("data", "model"),
-    axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
 DR.make_production_mesh = M.make_production_mesh
 
 import repro.configs.registry as REG

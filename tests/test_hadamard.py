@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hadamard as H

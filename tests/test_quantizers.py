@@ -4,6 +4,9 @@ QuEST masks, the paper's Table-2 metric reproduction."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

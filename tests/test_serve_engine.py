@@ -1,0 +1,252 @@
+"""Continuous-batching engine: paged FP4 KV cache, scheduler, parity.
+
+Parity contract: with concurrent requests of different prompt lengths, the
+engine's dense-cache outputs are token-for-token those of sequential
+``greedy_generate`` for every model family; FP4-cache mode stays within a
+log-prob tolerance of dense-cache mode while using ≥ 3× fewer cache bytes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import formats as F
+from repro.core import quantizers as Q
+from repro.models import build_model
+from repro.serve import Engine, EngineConfig, PagedCache
+from repro.train.serve import greedy_generate
+
+KEY = jax.random.PRNGKey(0)
+
+# one representative per family in the reduced registry
+FAMILY_ARCHS = [
+    "qwen3-1.7b",          # dense   (paged KV)
+    "qwen3-moe-235b-a22b", # moe     (paged KV)
+    "falcon-mamba-7b",     # ssm     (dense slots)
+    "zamba2-7b",           # hybrid  (dense slots)
+    "whisper-tiny",        # encdec  (dense slots, cross-KV)
+    "llama-3.2-vision-11b",# vlm     (dense slots, cross-KV)
+]
+
+
+def _extra(cfg, batch=1):
+    if cfg.family == "encdec":
+        return {"source_embeds": jax.random.normal(
+            KEY, (batch, cfg.max_source_len, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "vlm":
+        return {"image_embeds": jax.random.normal(
+            KEY, (batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)}
+    return None
+
+
+@pytest.fixture(scope="module", params=FAMILY_ARCHS)
+def family_setup(request):
+    cfg = get_reduced_config(request.param)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return request.param, cfg, model, params
+
+
+# ---------------------------------------------------------------------------
+# packed MXFP4 payload (core + Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def test_nibble_pack_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((5, 64)).astype(np.float32) * 3)
+    q = Q.rtn_absmax(x, scale_mode="nearest")
+    on_grid = F.to_blocks(q.values, 32) / F.e8m0_code_to_scale(
+        F.scale_to_e8m0_code(q.scales))[..., None]
+    nib = F.e2m1_to_nibble(on_grid)
+    assert bool(jnp.all(F.nibble_to_e2m1(nib) == on_grid))
+    packed = F.pack_nibbles(F.from_blocks(nib))
+    assert packed.dtype == jnp.uint8 and packed.shape == (5, 32)
+    assert bool(jnp.all(F.unpack_nibbles(packed) == F.from_blocks(nib)))
+
+
+def test_kv_quantize_matches_rtn_absmax():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((3, 9, 64)).astype(np.float32) * 2)
+    pq = Q.kv_quantize(x)
+    y = Q.kv_dequantize(pq)
+    ref = Q.rtn_absmax(x, scale_mode="nearest")
+    assert bool(jnp.all(y == ref.values))
+    bits = (pq.codes.nbytes + pq.scales.nbytes) * 8 / x.size
+    assert bits == 4.25
+
+
+def test_kv_pack_kernel_matches_reference():
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((17, 96)).astype(np.float32) * 4)
+    codes, scales = ops.kv_quant_pack(x)
+    ref = Q.kv_quantize(x)
+    assert bool(jnp.all(codes == ref.codes))
+    assert bool(jnp.all(scales == ref.scales))
+    y = ops.kv_dequant_unpack(codes, scales)
+    assert bool(jnp.all(y == Q.kv_dequantize(ref)))
+
+
+# ---------------------------------------------------------------------------
+# PagedCache allocator
+# ---------------------------------------------------------------------------
+
+
+def test_paged_allocator_freelist():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    cache = PagedCache(model, n_slots=2, pages_per_slot=4, page_size=8,
+                       n_pages=6, kv_dtype="dense")
+    assert cache.free_pages == 5  # page 0 reserved as scratch
+    cache.alloc(0, 17)  # 3 pages
+    assert cache.free_pages == 2
+    assert 0 not in cache.tables[0][:3]
+    assert cache.can_alloc(16) and not cache.can_alloc(17)
+    with pytest.raises(RuntimeError):
+        cache.alloc(1, 25)
+    cache.free(0)
+    assert cache.free_pages == 5
+    assert cache.can_alloc(32)  # pages_per_slot bound
+    assert not cache.can_alloc(33)
+    with pytest.raises(ValueError):
+        cache.alloc(1, 8 * 5)  # exceeds pages_per_slot
+
+
+def test_paged_cache_fp4_bytes():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    dense = PagedCache(model, n_slots=2, pages_per_slot=2, page_size=8,
+                       kv_dtype="dense")
+    fp4 = PagedCache(model, n_slots=2, pages_per_slot=2, page_size=8,
+                     kv_dtype="mxfp4")
+    assert dense.cache_bytes() / fp4.cache_bytes() >= 3.0
+    assert fp4.bits_per_element() == 4.25
+
+
+# ---------------------------------------------------------------------------
+# greedy_generate boundary (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_generate_max_new_1():
+    cfg = get_reduced_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    prompt = jax.random.randint(KEY, (2, 6), 0, cfg.vocab_size)
+    one = greedy_generate(model, params, prompt, max_new=1, max_len=12)
+    three = greedy_generate(model, params, prompt, max_new=3, max_len=12)
+    assert one.shape == (2, 1)
+    assert bool(jnp.all(one[:, 0] == three[:, 0]))
+    with pytest.raises(ValueError):
+        greedy_generate(model, params, prompt, max_new=0, max_len=12)
+
+
+# ---------------------------------------------------------------------------
+# engine vs sequential greedy_generate — every family
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_greedy_all_families(family_setup):
+    arch, cfg, model, params = family_setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (7, 12)]  # concurrent, different lengths
+    max_new = 4
+
+    engine = Engine(model, params, EngineConfig(
+        n_slots=3, max_len=32, page_size=8, kv_dtype="dense",
+        prefill_chunk=8, keep_logits=True))
+    handles = [engine.submit(p, max_new, extra=_extra(cfg)) for p in prompts]
+    engine.drain()
+
+    for p, h in zip(prompts, handles):
+        ref = greedy_generate(model, params, jnp.asarray(p)[None],
+                              max_new=max_new, max_len=int(p.size) + max_new,
+                              extra=_extra(cfg))
+        assert h.tokens == ref[0].tolist(), (arch, h.tokens, ref[0].tolist())
+        # logits parity at the first generated position: engine chunked
+        # prefill vs one whole-prompt teacher-forced forward.  Recurrent-state
+        # families (ssm/hybrid) compute a *different chunk decomposition* of
+        # the same recurrence, and the FP4 forward quantizer amplifies that
+        # epsilon discontinuously (observed ≤1.3 in the log-prob tail while
+        # argmax stays identical) — same effect test_models_smoke's
+        # decode-suffix test sees without the engine.  Dense/attention
+        # families have no cross-chunk state, so they sit at ~1e-2.
+        tol = 1.5 if cfg.family in ("ssm", "hybrid") else 0.35
+        full, _, _ = model.forward(params, jnp.asarray(p)[None], jnp.uint32(0),
+                                   extra=_extra(cfg))
+        a = np.asarray(jax.nn.log_softmax(h.logits_trace[0]))
+        b = np.asarray(jax.nn.log_softmax(full[0, -1]))
+        assert np.max(np.abs(a - b)) < tol, (arch, np.max(np.abs(a - b)))
+
+
+def test_engine_fp4_close_to_dense_and_3x_smaller():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+
+    traces, nbytes = {}, {}
+    for kv in ("dense", "mxfp4"):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=2, max_len=32, page_size=8, kv_dtype=kv,
+            prefill_chunk=8, keep_logits=True))
+        h = eng.submit(prompt, 4)
+        eng.drain()
+        traces[kv], nbytes[kv] = h.logits_trace, eng.cache_bytes()
+
+    assert nbytes["dense"] / nbytes["mxfp4"] >= 3.0
+    # 4-bit cache error stays bounded relative to the dense-cache run (the
+    # reduced model's logit std is ~1, so a couple of nats is "close")
+    d0 = np.asarray(jax.nn.log_softmax(traces["dense"][0]))
+    q0 = np.asarray(jax.nn.log_softmax(traces["mxfp4"][0]))
+    assert np.max(np.abs(d0 - q0)) < 2.5
+    assert np.mean(np.abs(d0 - q0)) < 0.5
+
+
+# ---------------------------------------------------------------------------
+# scheduler behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_engine_queueing_and_slot_reuse():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(5)
+    engine = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=32, page_size=8, kv_dtype="mxfp4", prefill_chunk=8))
+
+    handles = [engine.submit(rng.integers(0, cfg.vocab_size, 5 + i).astype(np.int32), 3)
+               for i in range(5)]  # 5 requests, 2 slots
+    assert len(engine.sched.queue) == 5
+    engine.step()
+    assert len(engine.sched.active) == 2  # only 2 admitted
+    engine.drain()
+    assert all(h.done and len(h.tokens) == 3 for h in handles)
+    assert engine.cache.free_pages == engine.cache.n_pages - 1  # all recycled
+    assert len(engine.sched.free_slots) == 2
+
+
+def test_engine_eos_early_stop():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    first = int(greedy_generate(model, params, jnp.asarray(prompt)[None],
+                                max_new=1, max_len=16)[0, 0])
+
+    engine = Engine(model, params, dataclasses.replace(
+        EngineConfig(n_slots=2, max_len=32, page_size=8, kv_dtype="dense",
+                     prefill_chunk=8), eos_id=first))
+    h = engine.submit(prompt, 8)
+    engine.drain()
+    assert h.tokens == [first] and h.finish_reason == "eos"
