@@ -105,4 +105,39 @@ def run() -> list[tuple]:
     jax.block_until_ready(y)
     rows.append(("fig3/kernel_mxfp4_matmul_interp", (time.perf_counter() - t0) / 5 * 1e6,
                  "cpu-interpret"))
+
+    # Paged-attention decode (serving): the step is HBM-bound, so the model
+    # speedup is the KV-bytes ratio of the legacy gather-dequantize path
+    # (read packed + write dense + read dense) over the fused kernel (read
+    # packed pages in place) — llama-7B-class GQA shape (hd=128, 8 KV heads).
+    hd, hkv = 128, 8
+    packed = 2 * hkv * (hd // 2 + hd // 32)  # 4.25-bit K+V payload per token
+    dense = 2 * hkv * hd * 2  # bf16 K+V per token
+    rows.append(("fig3/decode_paged_vs_gather_bytes", 0.0,
+                 f"{(packed + 2 * dense) / packed:.2f}x fewer KV bytes/step "
+                 f"(packed {packed}B vs gather {packed + 2 * dense}B per tok)"))
+
+    # CPU interpret-mode wall time for the fused paged-attention kernel
+    from repro.kernels.paged_attention import paged_attention, quant_block
+
+    B, hq, ps, n_pp = 4, 2 * hkv, 16, 4
+    n_pages = 1 + B * n_pp
+    nb = hd // quant_block(hd)
+    pool = {
+        "k_codes": jnp.zeros((n_pages, ps, hkv, hd // 2), jnp.uint8),
+        "k_scales": jnp.full((n_pages, ps, hkv, nb), 127, jnp.uint8),
+        "v_codes": jnp.zeros((n_pages, ps, hkv, hd // 2), jnp.uint8),
+        "v_scales": jnp.full((n_pages, ps, hkv, nb), 127, jnp.uint8),
+    }
+    tables = jnp.arange(1, 1 + B * n_pp, dtype=jnp.int32).reshape(B, n_pp)
+    lengths = jnp.full((B,), ps * n_pp, jnp.int32)
+    qd = jax.random.normal(jax.random.PRNGKey(2), (B, hq, hd))
+    o = paged_attention(qd, pool, tables, lengths)
+    jax.block_until_ready(o)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        o = paged_attention(qd, pool, tables, lengths)
+    jax.block_until_ready(o)
+    rows.append(("fig3/kernel_paged_attention_interp",
+                 (time.perf_counter() - t0) / 5 * 1e6, "cpu-interpret"))
     return rows

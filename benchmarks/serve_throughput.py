@@ -1,14 +1,24 @@
 """Serving benchmark: continuous batching + paged FP4 KV cache.
 
 ``PYTHONPATH=src python benchmarks/serve_throughput.py --reduced`` runs a
-fixed-seed mixed-length workload through the engine twice (dense-cache and
-MXFP4-cache modes) and prints a JSON report:
+fixed-seed mixed-length workload through the engine in four configurations —
+{dense, mxfp4 cache} × {paged-kernel, gather-dense decode} — and prints a
+JSON report:
 
-* tokens/sec (decode throughput, wall clock, post-warmup),
+* tokens/sec (decode throughput, wall clock, post-warmup) per configuration,
 * p50/p95 request latency and TTFT on the virtual serving clock,
 * persistent cache bytes dense vs FP4 and their ratio,
-* a parity check — dense-cache engine outputs must equal sequential
-  ``greedy_generate`` token-for-token for every request.
+* decode-step HBM traffic model: KV bytes touched per batched decode step by
+  the fused paged-attention kernel (O(packed KV): read the packed pages in
+  place) vs the legacy gather-dequantize oracle (read packed + write dense +
+  read dense), and their ratio,
+* parity checks — dense-cache engine outputs must equal sequential
+  ``greedy_generate`` token-for-token, and the paged-kernel decode must equal
+  the gather-dense decode token-for-token in dense-cache mode.
+
+CPU wall-clock caveat: the paged kernel runs in Pallas *interpret* mode here,
+so its tok/s is a correctness-path number; the bytes model is the hardware
+claim (the kernel's blocking moves 4.25-bit payload instead of bf16 KV).
 
 ``run()`` adapts the same numbers to the ``benchmarks.run`` CSV driver.
 """
@@ -50,6 +60,29 @@ def _pct(xs, q):
     return xs[min(len(xs) - 1, int(q * len(xs)))]
 
 
+def decode_kv_bytes_per_step(cache, backend: str) -> int:
+    """KV bytes touched by one batched decode step (model, not measurement).
+
+    Both paths see every slot's full page table (T = pages_per_slot·page_size
+    positions per slot, all L layers).  The paged kernel streams the packed
+    pages once; the gather oracle reads the packed pool, writes the dense
+    [L, B, T, Hkv, hd] view, then attention reads it back.  Per-token scatter
+    writes (4.25-bit payload for one token) are negligible and omitted.
+    """
+    hd, H, L = cache.head_dim, cache.kv_heads, cache.layers
+    tokens = cache.n_slots * cache.pages_per_slot * cache.page_size
+    if cache.kv_dtype == "dense":
+        packed_per_tok = 2 * H * hd * jnp.dtype(cache._dtype).itemsize
+    else:
+        nb = cache.pool["k_scales"].shape[-1]  # scale bytes per head per token
+        packed_per_tok = 2 * H * (hd // 2 + nb)
+    packed = L * tokens * packed_per_tok
+    if backend == "paged":
+        return packed
+    dense = L * tokens * 2 * H * hd * jnp.dtype(cache._dtype).itemsize
+    return packed + 2 * dense  # read packed + write dense + read dense
+
+
 def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
           max_new: int = 8, n_slots: int = 4, verify_parity: bool = True) -> dict:
     from repro.launch.serve_engine import run_workload
@@ -62,11 +95,13 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
                     "n_requests": n_requests, "max_new": max_new,
                     "n_slots": n_slots}
 
-    outputs = {}
-    for kv in ("dense", "mxfp4"):
+    outputs: dict = {}
+    report["decode_backends"] = {}
+    for kv, backend in (("dense", "paged"), ("dense", "gather"),
+                        ("mxfp4", "paged"), ("mxfp4", "gather")):
         eng = Engine(model, params, EngineConfig(
             n_slots=n_slots, max_len=64, page_size=16, kv_dtype=kv,
-            prefill_chunk=16))
+            prefill_chunk=16, decode_backend=backend))
         # warmup: compile the three step shapes outside the timed region
         eng.submit(workload[0][1], 2, arrival_time=0.0)
         eng.drain()
@@ -76,8 +111,8 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
         done, _ = run_workload(eng, workload, verbose=False)
         wall = time.perf_counter() - t0
         toks = sum(len(r.tokens) for r in done)
-        outputs[kv] = {r.rid: list(r.tokens) for r in done}
-        report[kv] = {
+        outputs[(kv, backend)] = {r.rid: list(r.tokens) for r in done}
+        stats = {
             "tokens_per_sec": round(toks / wall, 2),
             "wall_sec": round(wall, 3),
             "latency_p50_s": round(_pct([r.latency() for r in done], 0.5), 4),
@@ -87,10 +122,26 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
             "cache_bytes": eng.cache_bytes(),
             "bits_per_kv_elem": round(eng.cache.bits_per_element(), 2)
             if eng.paged else 16.0,
+            "decode_kv_bytes_per_step":
+            decode_kv_bytes_per_step(eng.cache, backend) if eng.paged else 0,
         }
+        if backend == "paged":  # primary numbers, keyed by cache dtype
+            report[kv] = stats
+        report["decode_backends"][f"{kv}/{backend}"] = {
+            k: stats[k] for k in
+            ("tokens_per_sec", "wall_sec", "decode_kv_bytes_per_step")}
 
     report["cache_ratio"] = round(
         report["dense"]["cache_bytes"] / report["mxfp4"]["cache_bytes"], 2)
+    db = report["decode_backends"]
+    paged_bytes = db["mxfp4/paged"]["decode_kv_bytes_per_step"]
+    report["decode_bytes_ratio_gather_over_paged"] = round(
+        db["mxfp4/gather"]["decode_kv_bytes_per_step"] / paged_bytes, 2
+    ) if paged_bytes else None  # dense-slot families: no paged decode path
+    # the paged kernel must reproduce the gather oracle exactly when the pool
+    # stores the compute dtype (same values, same online-softmax math)
+    report["parity_paged_vs_gather_dense"] = (
+        outputs[("dense", "paged")] == outputs[("dense", "gather")])
 
     if verify_parity:
         ref_toks = []
@@ -101,7 +152,8 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
         # rids are assigned in submission (arrival) order; the warmup request
         # is cleared, so sorted rids map 1:1 onto the workload — minus the
         # warmup's rid 0 offset
-        eng_toks = [outputs["dense"][rid] for rid in sorted(outputs["dense"])]
+        dense_out = outputs[("dense", "paged")]
+        eng_toks = [dense_out[rid] for rid in sorted(dense_out)]
         report["parity_dense_vs_sequential"] = eng_toks == ref_toks
 
     return report
@@ -110,14 +162,22 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
 def run():
     """benchmarks.run driver hook → (name, us_per_call, derived) rows."""
     rep = bench()
-    us = rep["mxfp4"]["wall_sec"] * 1e6 / max(rep["n_requests"] * rep["max_new"], 1)
+    per_tok = max(rep["n_requests"] * rep["max_new"], 1)
+    db = rep["decode_backends"]
     return [
-        ("serve_fp4_tok_per_s", us, f"{rep['mxfp4']['tokens_per_sec']}tok/s"),
-        ("serve_dense_tok_per_s",
-         rep["dense"]["wall_sec"] * 1e6 / max(rep["n_requests"] * rep["max_new"], 1),
+        ("serve_fp4_tok_per_s", rep["mxfp4"]["wall_sec"] * 1e6 / per_tok,
+         f"{rep['mxfp4']['tokens_per_sec']}tok/s"),
+        ("serve_dense_tok_per_s", rep["dense"]["wall_sec"] * 1e6 / per_tok,
          f"{rep['dense']['tokens_per_sec']}tok/s"),
+        ("serve_gather_decode_tok_per_s",
+         db["mxfp4/gather"]["wall_sec"] * 1e6 / per_tok,
+         f"{db['mxfp4/gather']['tokens_per_sec']}tok/s"),
         ("serve_cache_ratio", 0.0, f"{rep['cache_ratio']}x"),
+        ("serve_decode_bytes_ratio", 0.0,
+         f"{rep['decode_bytes_ratio_gather_over_paged']}x"),
         ("serve_parity", 0.0, str(rep.get("parity_dense_vs_sequential", "skipped"))),
+        ("serve_parity_paged_vs_gather", 0.0,
+         str(rep["parity_paged_vs_gather_dense"])),
     ]
 
 
@@ -129,12 +189,24 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--no-parity", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fixed workload + assert the paged-kernel "
+                         "decode metrics and parity flags are present (CI)")
     args = ap.parse_args()
+    if args.smoke:
+        args.reduced, args.requests, args.max_new, args.slots = True, 4, 4, 2
     rep = bench(args.arch, args.reduced, args.requests, args.max_new,
                 args.slots, verify_parity=not args.no_parity)
     print(json.dumps(rep, indent=2))
+    if args.smoke:
+        for key in ("mxfp4/paged", "mxfp4/gather", "dense/paged"):
+            assert key in rep["decode_backends"], f"missing decode metrics {key}"
+            assert rep["decode_backends"][key]["decode_kv_bytes_per_step"] > 0
+        assert rep["decode_bytes_ratio_gather_over_paged"] > 1.0
     if rep.get("parity_dense_vs_sequential") is False:
         raise SystemExit("PARITY FAILURE: dense-cache engine != sequential greedy")
+    if not rep["parity_paged_vs_gather_dense"]:
+        raise SystemExit("PARITY FAILURE: paged-kernel decode != gather-dense decode")
     if rep["cache_ratio"] < 3.0:
         raise SystemExit(f"cache ratio {rep['cache_ratio']} < 3x")
 

@@ -70,6 +70,13 @@ class ModelConfig:
     dtype: str = "bfloat16"
 
     # execution
+    # attention backend (models.attention.dispatch_attention):
+    #   "blocked" — jnp online-softmax reference (differentiable; train default)
+    #   "flash"   — Pallas flash kernel for from-scratch self-attention
+    #   "paged"   — serving decode attends directly over packed MXFP4 pages
+    #               (dense call sites fall back to "blocked"); this is what
+    #               makes the engine's batched decode O(packed KV) HBM traffic
+    attn_backend: Literal["blocked", "flash", "paged"] = "paged"
     attn_q_chunk: int = 1024  # flash-style blocking for long sequences
     attn_kv_chunk: int = 1024
     remat: bool = True

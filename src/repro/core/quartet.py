@@ -177,6 +177,52 @@ def _quartet_fwd(x, w, seed, cfg: QuartetConfig):
     return y, (xv, wv, xq.mask, jnp.swapaxes(wq.mask, 0, 1), seed, sent_x, sent_w)
 
 
+def _bwd_rotate_quantize_gemms(cfg: QuartetConfig, xq_v, wq_v, m_x, seed, dy):
+    """Shared Algorithm-1 backward body for ``_quartet_bwd`` and ``_pq_bwd``:
+    the two rotate→quantize→GEMM blocks.
+
+    Returns ``(dx, dw_rot)`` — ``dx [..., K]`` with the activation mask ⊙ and
+    H⁻¹ already applied, and ``dw_rot [K, N]`` left in the rotated-quantized
+    weight space (the caller owns the weight mask ⊙ + H⁻¹, which for the
+    pre-quantized-weight variant live in ``quest_qdq_gathered``'s VJP).
+    """
+    K, N = wq_v.shape
+    dyf = dy.astype(jnp.float32)
+    lead = dy.shape[:-1]
+    Bflat = int(np.prod(lead)) if lead else 1
+
+    # ----- dx = H⁻¹( 16/9 · (SR(¾·Ĥ_N dy) @ SR(¾·Ĥ_N Wᵀ)ᵀ) ⊙ M_x ) ----------
+    # zero-pad N to a multiple of the Hadamard group (exact; see _pad32)
+    dy_p = _pad32(dyf, axis=-1)
+    wq_p = _pad32(wq_v.astype(jnp.float32), axis=-1)
+    Np = dy_p.shape[-1]
+    signs_n = fastrng.rademacher(seed, Np, salt=11)
+    g_h = _maybe_rht(dy_p, signs_n, cfg, axis=-1)  # [..., Np]
+    wt_h = _maybe_rht(wq_p, signs_n, cfg, axis=-1)
+    if cfg.bwd_rounding == "none":
+        dx_rot = _gemm(g_h, jnp.swapaxes(wt_h, 0, 1), cfg.accum_dtype)
+    else:
+        g_q = _bwd_quantize(g_h, cfg, seed, salt=1)
+        wt_q = _bwd_quantize(wt_h, cfg, seed, salt=2)  # blocks along N ✓
+        dx_rot = SR_POSTSCALE * _gemm(g_q, jnp.swapaxes(wt_q, 0, 1), cfg.accum_dtype)
+    dx = hadamard_transform(dx_rot * m_x, g=cfg.group, axis=-1)  # H⁻¹ = H
+
+    # ----- dW_rot = 16/9 · SR(¾·Ĥ_B Xᵀ)ᵀ @ SR(¾·Ĥ_B dy) ----------------------
+    xf = _pad32(xq_v.astype(jnp.float32).reshape(Bflat, K), axis=0)  # exact
+    gf = _pad32(dyf.reshape(Bflat, N), axis=0)
+    Bp = xf.shape[0]
+    signs_b = fastrng.rademacher(seed, Bp, salt=12)
+    x2 = _maybe_rht(xf, signs_b, cfg, axis=0)
+    g2 = _maybe_rht(gf, signs_b, cfg, axis=0)
+    if cfg.bwd_rounding == "none":
+        dw_rot = _gemm(jnp.swapaxes(x2, 0, 1), g2, cfg.accum_dtype)
+    else:
+        x2_q = _bwd_quantize(jnp.swapaxes(x2, 0, 1), cfg, seed, salt=3)  # [K, B]
+        g2_q = _bwd_quantize(jnp.swapaxes(g2, 0, 1), cfg, seed, salt=4)  # [N, B]
+        dw_rot = SR_POSTSCALE * _gemm(x2_q, jnp.swapaxes(g2_q, 0, 1), cfg.accum_dtype)
+    return dx, dw_rot
+
+
 def _quartet_bwd(cfg: QuartetConfig, res, dy):
     if cfg.fwd_quantizer == "none":
         x, w, seed = res
@@ -191,51 +237,9 @@ def _quartet_bwd(cfg: QuartetConfig, res, dy):
         return _quartet_bwd_kernels(cfg, res, dy)
 
     xq_v, wq_v, m_x, m_w, seed, sent_x, sent_w = res
-    x_dtype, w_dtype = sent_x.dtype, sent_w.dtype
-
-    K, N = wq_v.shape
-    dyf = dy.astype(jnp.float32)
-    lead = dy.shape[:-1]
-    Bflat = int(np.prod(lead)) if lead else 1
-
-    # ----- dx = H⁻¹( 16/9 · (SR(¾·Ĥ_N dy) @ SR(¾·Ĥ_N Wᵀ)ᵀ) ⊙ M_x ) ----------
-    # zero-pad N to a multiple of the Hadamard group (exact; see _pad32)
-    dy_p = _pad32(dyf, axis=-1)
-    wq_p = _pad32(wq_v, axis=-1)
-    Np = dy_p.shape[-1]
-    signs_n = fastrng.rademacher(seed, Np, salt=11)
-    g_h = _maybe_rht(dy_p, signs_n, cfg, axis=-1)  # [..., Np]
-    wt_h = _maybe_rht(wq_p.astype(jnp.float32), signs_n, cfg, axis=-1)
-    if cfg.bwd_rounding == "none":
-        dx_rot = _gemm(g_h, jnp.swapaxes(wt_h, 0, 1), cfg.accum_dtype)
-    else:
-        g_q = _bwd_quantize(g_h, cfg, seed, salt=1)
-        wt_q = _bwd_quantize(wt_h, cfg, seed, salt=2)  # blocks along N ✓
-        dx_rot = SR_POSTSCALE * _gemm(g_q, jnp.swapaxes(wt_q, 0, 1), cfg.accum_dtype)
-    dx = hadamard_transform(dx_rot * m_x, g=cfg.group, axis=-1)  # H⁻¹ = H
-
-    # ----- dW = H⁻¹( 16/9 · (SR(¾·Ĥ_B Xᵀ)ᵀ @ SR(¾·Ĥ_B dy)) ⊙ M_w ) ----------
-    xf = _pad32(xq_v.astype(jnp.float32).reshape(Bflat, K), axis=0)  # exact
-    gf = _pad32(dyf.reshape(Bflat, N), axis=0)
-    Bp = xf.shape[0]
-    if cfg.bwd_hadamard == "random":
-        signs_b = fastrng.rademacher(seed, Bp, salt=12)
-        x2 = randomized_hadamard_transform(xf, signs_b, g=cfg.group, axis=0)
-        g2 = randomized_hadamard_transform(gf, signs_b, g=cfg.group, axis=0)
-    elif cfg.bwd_hadamard == "fixed":
-        x2 = hadamard_transform(xf, g=cfg.group, axis=0)
-        g2 = hadamard_transform(gf, g=cfg.group, axis=0)
-    else:
-        x2, g2 = xf, gf
-    if cfg.bwd_rounding == "none":
-        dw_rot = _gemm(jnp.swapaxes(x2, 0, 1), g2, cfg.accum_dtype)
-    else:
-        x2_q = _bwd_quantize(jnp.swapaxes(x2, 0, 1), cfg, seed, salt=3)  # [K, B]
-        g2_q = _bwd_quantize(jnp.swapaxes(g2, 0, 1), cfg, seed, salt=4)  # [N, B]
-        dw_rot = SR_POSTSCALE * _gemm(x2_q, jnp.swapaxes(g2_q, 0, 1), cfg.accum_dtype)
+    dx, dw_rot = _bwd_rotate_quantize_gemms(cfg, xq_v, wq_v, m_x, seed, dy)
     dw = hadamard_transform(dw_rot * m_w, g=cfg.group, axis=0)  # H⁻¹ along K
-
-    return dx.astype(x_dtype), dw.astype(w_dtype), _float0_like(seed)
+    return dx.astype(sent_x.dtype), dw.astype(sent_w.dtype), _float0_like(seed)
 
 
 def _dequant_codes(codes: jnp.ndarray, scales: jnp.ndarray, group: int) -> jnp.ndarray:
@@ -399,38 +403,13 @@ def _pq_fwd(x, w_vals, w_mask, seed, cfg: QuartetConfig):
 
 
 def _pq_bwd(cfg: QuartetConfig, res, dy):
-    """Algorithm-1 backward; dW is returned in the rotated-quantized space —
-    the mask ⊙ and H⁻¹ happen in quest_qdq_gathered's VJP."""
+    """Algorithm-1 backward via the shared body; dW is returned in the
+    rotated-quantized space — the mask ⊙ and H⁻¹ happen in
+    quest_qdq_gathered's VJP."""
     xq_v, wq_v, m_x, seed, sent_x = res
-    K, N = wq_v.shape
-    dyf = dy.astype(jnp.float32)
-    lead = dy.shape[:-1]
-    Bflat = int(np.prod(lead)) if lead else 1
-
-    dy_p = _pad32(dyf, axis=-1)
-    wq_p = _pad32(wq_v.astype(jnp.float32), axis=-1)
-    Np = dy_p.shape[-1]
-    signs_n = fastrng.rademacher(seed, Np, salt=11)
-    g_h = _maybe_rht(dy_p, signs_n, cfg, axis=-1)
-    wt_h = _maybe_rht(wq_p, signs_n, cfg, axis=-1)
-    g_q = _bwd_quantize(g_h, cfg, seed, salt=1)
-    wt_q = _bwd_quantize(wt_h, cfg, seed, salt=2)
-    dx_rot = SR_POSTSCALE * _gemm(g_q, jnp.swapaxes(wt_q, 0, 1), cfg.accum_dtype)
-    dx = hadamard_transform(dx_rot * m_x, g=cfg.group, axis=-1)
-
-    xf = _pad32(xq_v.astype(jnp.float32).reshape(Bflat, K), axis=0)
-    gf = _pad32(dyf.reshape(Bflat, N), axis=0)
-    Bp = xf.shape[0]
-    signs_b = fastrng.rademacher(seed, Bp, salt=12)
-    x2 = randomized_hadamard_transform(xf, signs_b, g=cfg.group, axis=0)
-    g2 = randomized_hadamard_transform(gf, signs_b, g=cfg.group, axis=0)
-    x2_q = _bwd_quantize(jnp.swapaxes(x2, 0, 1), cfg, seed, salt=3)
-    g2_q = _bwd_quantize(jnp.swapaxes(g2, 0, 1), cfg, seed, salt=4)
-    dw_rot = SR_POSTSCALE * _gemm(x2_q, jnp.swapaxes(g2_q, 0, 1), cfg.accum_dtype)
-
+    dx, dw_rot = _bwd_rotate_quantize_gemms(cfg, xq_v, wq_v, m_x, seed, dy)
     mask_ct = np.zeros(wq_v.shape, dtype=jax.dtypes.float0)  # bool operand
-    return (dx.astype(sent_x.dtype).reshape(*lead, K), dw_rot, mask_ct,
-            _float0_like(seed))
+    return dx.astype(sent_x.dtype), dw_rot, mask_ct, _float0_like(seed)
 
 
 quartet_linear_pq.defvjp(_pq_fwd, _pq_bwd)

@@ -5,9 +5,12 @@
   Stage 2 — block-scaled GEMM:   mxfp4_matmul (int8 half-codes + E8M0 scales,
             per-tile VMEM dequant, fp32-accumulating MXU dot).
 
-Plus flash_attention — the serving-path attention hot-spot for the
+Plus the serving-path attention hot-spots: flash_attention for the
 32k-prefill / long-decode shapes (online-softmax KV streaming, causal block
-skipping), oracle-tested like the rest.
+skipping, GQA KV heads read in place via the block index map) and
+paged_attention — batched decode directly over the engine's packed MXFP4 KV
+pages (scalar-prefetched page tables drive the KV fetch, per-tile VMEM
+dequantization, per-slot length masking) — both oracle-tested like the rest.
 
 ``ops.py`` holds the jit'd shape-flexible wrappers; ``ref.py`` the pure-jnp
 oracles each kernel is verified against (bit-exact) in interpret mode.
@@ -16,4 +19,7 @@ oracles each kernel is verified against (bit-exact) in interpret mode.
 from repro.kernels.flash_attention import flash_attention, mha_flash  # noqa: F401
 from repro.kernels.hadamard_quant import hadamard_quest_quantize  # noqa: F401
 from repro.kernels.mxfp4_matmul import mxfp4_matmul  # noqa: F401
+# NOTE: re-export PagedKV only — binding the `paged_attention` function here
+# would shadow the submodule of the same name on the package object
+from repro.kernels.paged_attention import PagedKV  # noqa: F401
 from repro.kernels.sr_hadamard_quant import sr_hadamard_quantize  # noqa: F401

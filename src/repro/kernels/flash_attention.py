@@ -77,19 +77,26 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                             "interpret"))
+                                             "q_heads", "kv_heads", "interpret"))
 def flash_attention(
-    q: jnp.ndarray,  # [BH, S, hd]
-    k: jnp.ndarray,  # [BH, T, hd]
-    v: jnp.ndarray,  # [BH, T, hd]
+    q: jnp.ndarray,  # [B·Hq, S, hd]
+    k: jnp.ndarray,  # [B·Hkv, T, hd]
+    v: jnp.ndarray,  # [B·Hkv, T, hd]
     causal: bool = True,
     block_q: int = 256,
     block_k: int = 256,
+    q_heads: int = 1,
+    kv_heads: int = 1,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """GQA-native: the KV row for query row ``bh`` is resolved in the block
+    index map (``(bh // Hq)·Hkv + (bh % Hq) // group``), so KV heads are read
+    in place — never materialized ``group×`` larger via ``jnp.repeat``."""
     bh, s, hd = q.shape
     t = k.shape[1]
     scale = 1.0 / np.sqrt(hd)
+    group = q_heads // kv_heads
+    assert bh % q_heads == 0 and k.shape[0] == (bh // q_heads) * kv_heads
 
     bq = min(block_q, s)
     bk = min(block_k, t)
@@ -102,6 +109,9 @@ def flash_attention(
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
     nq, nk = (s + pad_q) // bq, (t + pad_k) // bk
 
+    def kv_row(b):
+        return (b // q_heads) * kv_heads + (b % q_heads) // group
+
     kern = functools.partial(
         _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk, nk=nk,
         t_valid=t)
@@ -110,8 +120,8 @@ def flash_attention(
         grid=(bh, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (kv_row(b), j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (kv_row(b), j, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, s + pad_q, hd), q.dtype),
@@ -130,13 +140,10 @@ def mha_flash(q, k, v, causal: bool = True, interpret: bool = True,
     """[B, S, Hq, hd] × [B, T, Hkv, hd] (GQA) → [B, S, Hq, hd]."""
     B, S, Hq, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
-    group = Hq // Hkv
-    if group > 1:  # broadcast KV heads (simulation-side; HW reads in place)
-        k = jnp.repeat(k, group, axis=2)
-        v = jnp.repeat(v, group, axis=2)
     qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, T, hd)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, T, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, T, hd)
     o = flash_attention(qf, kf, vf, causal=causal, block_q=block_q,
-                        block_k=block_k, interpret=interpret)
+                        block_k=block_k, q_heads=Hq, kv_heads=Hkv,
+                        interpret=interpret)
     return o.reshape(B, Hq, S, hd).transpose(0, 2, 1, 3)

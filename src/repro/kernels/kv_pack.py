@@ -36,6 +36,25 @@ def _exp2i(e: jnp.ndarray) -> jnp.ndarray:
     return jax.lax.bitcast_convert_type(bits, jnp.float32)
 
 
+def unpack_dequant(packed: jnp.ndarray, scale_codes: jnp.ndarray,
+                   block: int = GROUP) -> jnp.ndarray:
+    """Packed nibble codes [..., K/2] u8 + E8M0 scale codes [..., K/block] u8
+    → f32 values [..., K].  Pure arithmetic (no table gathers) so it lowers
+    on the VPU — shared by the unpack kernel below and the fused paged-
+    attention kernel (``kernels/paged_attention.py``), which calls it per
+    VMEM-resident KV tile."""
+    *lead, kh = packed.shape
+    k = kh * 2
+    nib = jnp.stack([(packed >> 4) & 0xF, packed & 0xF], axis=-1).reshape(*lead, k)
+    idx = (nib & 7).astype(jnp.float32)
+    mag_norm = _exp2i(jnp.floor((idx - 2.0) / 2.0)) * (1.0 + 0.5 * (idx % 2.0))
+    mag = jnp.where(idx >= 2.0, mag_norm, idx * 0.5)
+    val = jnp.where((nib & 8) > 0, -mag, mag)
+    scale = _exp2i(scale_codes.astype(jnp.float32) - 127.0)
+    return (val.reshape(*lead, k // block, block)
+            * scale[..., None]).reshape(*lead, k)
+
+
 def _kv_quant_pack_kernel(x_ref, codes_ref, scales_ref):
     """One [bm, bk] tile → packed nibbles [bm, bk/2] + E8M0 codes [bm, bk/32]."""
     x = x_ref[...].astype(jnp.float32)
@@ -60,19 +79,7 @@ def _kv_quant_pack_kernel(x_ref, codes_ref, scales_ref):
 
 def _kv_dequant_unpack_kernel(codes_ref, scales_ref, o_ref):
     """Packed [bm, bk/2] + scale codes [bm, bk/32] → f32 values [bm, bk]."""
-    packed = codes_ref[...]
-    bm = packed.shape[0]
-    bk = packed.shape[1] * 2
-    ng = bk // GROUP
-
-    nib = jnp.stack([(packed >> 4) & 0xF, packed & 0xF], axis=-1).reshape(bm, bk)
-    idx = (nib & 7).astype(jnp.float32)
-    mag_norm = _exp2i(jnp.floor((idx - 2.0) / 2.0)) * (1.0 + 0.5 * (idx % 2.0))
-    mag = jnp.where(idx >= 2.0, mag_norm, idx * 0.5)
-    val = jnp.where((nib & 8) > 0, -mag, mag)
-
-    scale = _exp2i(scales_ref[...].astype(jnp.float32) - 127.0)
-    o_ref[...] = (val.reshape(bm, ng, GROUP) * scale[..., None]).reshape(bm, bk)
+    o_ref[...] = unpack_dequant(codes_ref[...], scales_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))

@@ -1,0 +1,235 @@
+"""Fused MXFP4 paged-attention decode kernel (Pallas).
+
+Batched decode attends *directly over the packed KV pool*: the per-slot page
+table (scalar-prefetched, so it is available before the kernel body runs)
+drives the KV block fetch via the ``BlockSpec`` index map — page ``p`` of
+slot ``b`` pulls pool page ``tables[b, p]`` into VMEM.  E2M1 nibble codes and
+E8M0 scale bytes are unpacked/dequantized per tile *inside* the kernel
+(``kv_pack.unpack_dequant`` — pure arithmetic, VPU-friendly), so decode HBM
+traffic is O(packed KV) = 4.25 bits/element instead of the O(dense KV)
+gather-dequantize round-trip the engine previously paid.
+
+Blocking is GQA-native: the grid is ``(B, Hkv, pages_per_slot)`` with pages
+innermost; each (slot, KV-head) program streams that head's pages once and
+computes all ``Hq/Hkv`` query heads of the group against it — KV heads are
+read in place, never materialized ``group×`` (no ``jnp.repeat``).  Online
+softmax state (m, l, acc) lives in VMEM scratch across the page loop;
+per-slot valid-length masking (``lengths[b]``, i.e. decode position + 1)
+handles ragged batches, and fully-invalid pages are skipped with ``pl.when``
+(their DMA fetches the scratch page the allocator parks unmapped table
+entries on).
+
+``PagedKV`` is the pytree that threads this state through the model's
+layer scan: pool leaves carry a leading ``[L]`` axis and are consumed one
+layer-slice per scan step; ``tables`` is broadcast to ``[L, B, P]`` so each
+slice sees the same page mapping.  ``models.attention`` dispatches to this
+kernel whenever the decode cache is a ``PagedKV`` (see its backend matrix).
+
+Validated in interpret mode against ``models.attention.blocked_attention``
+over page-size / GQA / ragged-length / dense-vs-mxfp4 sweeps in
+tests/test_paged_attention.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import formats as F
+from repro.core import quantizers as Q
+from repro.kernels.kv_pack import unpack_dequant
+
+GROUP = 32
+NEG_INF = -1e30
+
+
+class PagedKV(NamedTuple):
+    """Paged decode-attention state (a pytree, scannable over layers).
+
+    ``pool``   — dict of pool leaves.  Packed mode: ``k_codes``/``v_codes``
+                 u8 [..., n_pages, ps, Hkv, hd/2] + ``k_scales``/``v_scales``
+                 u8 [..., n_pages, ps, Hkv, hd/block]; dense mode: ``k``/``v``
+                 in the compute dtype [..., n_pages, ps, Hkv, hd].
+    ``tables`` — int32 [..., B, pages_per_slot] page table (masked lanes'
+                 rows zeroed by the engine so their writes land on the
+                 reserved scratch page 0).
+
+    Leaves carry a leading ``[L]`` axis when used as a layer-scan xs.
+    """
+
+    pool: dict
+    tables: jnp.ndarray
+
+
+def quant_block(hd: int) -> int:
+    """MXFP4 scale-block size clamped to the head dim (blocks never straddle
+    heads; reduced configs use hd=32, full configs 128 — both divide)."""
+    return GROUP if hd % GROUP == 0 else hd
+
+
+def quant_fmt(hd: int) -> F.Format:
+    return dataclasses.replace(F.MXFP4, block=quant_block(hd))
+
+
+def scatter_token(pool: dict, page_ids: jnp.ndarray, offsets: jnp.ndarray,
+                  k_new: jnp.ndarray, v_new: jnp.ndarray) -> dict:
+    """Write one token per slot into a single layer's pool slice.
+
+    page_ids/offsets [B]; k_new/v_new [B, Hkv, hd].  Quantize-on-write in
+    packed mode.  Duplicate (page, offset) pairs (masked lanes redirected to
+    the scratch page) resolve arbitrarily — scratch contents are never read.
+    """
+    if "k" in pool:
+        return {
+            "k": pool["k"].at[page_ids, offsets].set(k_new.astype(pool["k"].dtype)),
+            "v": pool["v"].at[page_ids, offsets].set(v_new.astype(pool["v"].dtype)),
+        }
+    fmt = quant_fmt(k_new.shape[-1])
+    kq, vq = Q.kv_quantize(k_new, fmt), Q.kv_quantize(v_new, fmt)
+    return {
+        "k_codes": pool["k_codes"].at[page_ids, offsets].set(kq.codes),
+        "k_scales": pool["k_scales"].at[page_ids, offsets].set(kq.scales),
+        "v_codes": pool["v_codes"].at[page_ids, offsets].set(vq.codes),
+        "v_scales": pool["v_scales"].at[page_ids, offsets].set(vq.scales),
+    }
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _online_softmax_tile(q, k, v, kv_pos, q_pos, m_ref, l_ref, acc_ref):
+    """One [group, ps] score tile folded into the running (m, l, acc)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [group, ps]
+    s = jnp.where(kv_pos <= q_pos, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, *rest,
+                  load_kv, ps: int, n_pp: int, scale: float):
+    """One (slot, KV-head, page) step; ``load_kv(kv_refs)`` materializes the
+    page's [ps, hd] f32 K/V tiles (pool-dtype-specific — the only part that
+    differs between the packed and dense pools)."""
+    *kv_refs, o_ref, m_ref, l_ref, acc_ref = rest
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(p * ps < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [group, hd]
+        k, v = load_kv(kv_refs)
+        kv_pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        _online_softmax_tile(q, k, v, kv_pos, length - 1, m_ref, l_ref, acc_ref)
+
+    @pl.when(p == n_pp - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _load_kv_mxfp4(block: int):
+    def load(kv_refs):
+        kc, ks, vc, vs = kv_refs
+        return (unpack_dequant(kc[0, :, 0, :], ks[0, :, 0, :], block),
+                unpack_dequant(vc[0, :, 0, :], vs[0, :, 0, :], block))
+    return load
+
+
+def _load_kv_dense(kv_refs):
+    k_ref, v_ref = kv_refs
+    return (k_ref[0, :, 0, :].astype(jnp.float32),
+            v_ref[0, :, 0, :].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jnp.ndarray,  # [B, Hq, hd] — one decode query per slot
+    pool: dict,  # one layer's pool slice (packed or dense leaves)
+    tables: jnp.ndarray,  # [B, pages_per_slot] int32
+    lengths: jnp.ndarray,  # [B] int32 — visible tokens per slot (position + 1)
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Decode attention directly over the paged pool → [B, Hq, hd]."""
+    B, Hq, hd = q.shape
+    quantized = "k_codes" in pool
+    kleaf = pool["k_codes"] if quantized else pool["k"]
+    ps, Hkv = kleaf.shape[1], kleaf.shape[2]
+    group = Hq // Hkv
+    n_pp = tables.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Hkv, group, hd)
+
+    def kv_idx(b, h, p, tbl, ln):
+        del ln
+        return (tbl[b, p], 0, h, 0)
+
+    def q_idx(b, h, p, tbl, ln):
+        del p, tbl, ln
+        return (b, h, 0, 0)
+
+    if quantized:
+        block = quant_block(hd)
+        load_kv = _load_kv_mxfp4(block)
+        kv_specs = [
+            pl.BlockSpec((1, ps, 1, hd // 2), kv_idx),
+            pl.BlockSpec((1, ps, 1, hd // block), kv_idx),
+            pl.BlockSpec((1, ps, 1, hd // 2), kv_idx),
+            pl.BlockSpec((1, ps, 1, hd // block), kv_idx),
+        ]
+        operands = (pool["k_codes"], pool["k_scales"],
+                    pool["v_codes"], pool["v_scales"])
+    else:
+        load_kv = _load_kv_dense
+        kv_specs = [
+            pl.BlockSpec((1, ps, 1, hd), kv_idx),
+            pl.BlockSpec((1, ps, 1, hd), kv_idx),
+        ]
+        operands = (pool["k"], pool["v"])
+    kern = functools.partial(_paged_kernel, load_kv=load_kv, ps=ps, n_pp=n_pp,
+                             scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pp),
+        in_specs=[pl.BlockSpec((1, 1, group, hd), q_idx), *kv_specs],
+        out_specs=pl.BlockSpec((1, 1, group, hd), q_idx),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),  # running max
+            pltpu.VMEM((group, 1), jnp.float32),  # running denom
+            pltpu.VMEM((group, hd), jnp.float32),  # running numerator
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, qg, *operands)
+    return out.reshape(B, Hq, hd)

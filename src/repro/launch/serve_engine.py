@@ -80,6 +80,10 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--kv", default="mxfp4", choices=["mxfp4", "dense"])
+    ap.add_argument("--decode-backend", default=None,
+                    choices=["paged", "gather"],
+                    help="paged families: fused paged-attention kernel "
+                         "(default) vs gather-dequantize oracle")
     ap.add_argument("--method", default="quartet")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -95,7 +99,8 @@ def main():
     with activate_mesh(make_local_mesh()):
         engine = Engine(model, params, EngineConfig(
             n_slots=args.slots, max_len=args.max_len, page_size=args.page_size,
-            kv_dtype=args.kv, prefill_chunk=args.prefill_chunk, method=args.method))
+            kv_dtype=args.kv, prefill_chunk=args.prefill_chunk, method=args.method,
+            decode_backend=args.decode_backend))
         done, elapsed = run_workload(engine, workload, extra=make_extra(cfg, key))
 
     total_tokens = sum(len(r.tokens) for r in done)
@@ -103,7 +108,7 @@ def main():
     ttfts = sorted(r.ttft() for r in done)
     pct = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
     print(f"\n{cfg.name} [{cfg.family}] kv={args.kv if engine.paged else 'dense-slots'}"
-          f" slots={args.slots}")
+          f" decode={engine.decode_backend} slots={args.slots}")
     print(f"  {len(done)} requests, {total_tokens} tokens in {elapsed:.2f}s wall "
           f"→ {total_tokens / elapsed:.1f} tok/s")
     print(f"  latency p50={pct(lats, 0.5):.3f}s p95={pct(lats, 0.95):.3f}s | "

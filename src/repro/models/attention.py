@@ -1,9 +1,19 @@
-"""GQA attention with flash-style chunked computation.
+"""GQA attention behind one pluggable backend dispatch.
 
-The S×S score matrix is never materialized: an online-softmax ``lax.scan``
-over KV chunks keeps the live transient at [B, S, H, kv_chunk] — this is what
-makes the 32k-prefill and 500k-decode shapes lowerable, and it maps directly
-onto a Pallas flash kernel on hardware (same blocking).
+Every family (dense/MoE/hybrid/enc-dec/VLM) routes its attention through
+:func:`attention` → :func:`dispatch_attention`, which selects the backend
+from ``ModelConfig.attn_backend``:
+
+* ``"blocked"`` — the differentiable jnp reference below: an online-softmax
+  ``lax.scan`` over KV chunks; the S×S score matrix is never materialized,
+  which is what makes the 32k-prefill and 500k-decode shapes lowerable.
+* ``"flash"``   — the Pallas flash kernel (``kernels/flash_attention``), used
+  for from-scratch self-attention (S == T); cached/offset shapes fall back
+  to ``blocked``.
+* ``"paged"``   — batched decode attends *directly over packed MXFP4 pages*
+  via ``kernels/paged_attention`` whenever the cache operand is a
+  :class:`~repro.kernels.paged_attention.PagedKV`; dense (non-decode) call
+  sites behave as ``blocked``.
 
 All four projections (QKV + output) go through the Quartet linear.
 """
@@ -15,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import PagedKV, paged_attention, scatter_token
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -114,6 +125,56 @@ def blocked_attention(
     return out.reshape(B, S, Hq, hd).astype(q.dtype)
 
 
+def dispatch_attention(
+    q: jnp.ndarray,  # [B, S, Hq, hd]
+    k: jnp.ndarray,  # [B, T, Hkv, hd]
+    v: jnp.ndarray,  # [B, T, Hkv, hd]
+    q_positions: jnp.ndarray,  # [B, S]
+    *,
+    causal: bool,
+    cfg: ModelConfig,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Single dense-attention call site: backend from ``cfg.attn_backend``.
+
+    ``"flash"`` applies to from-scratch self-attention (S == T, where query
+    row i sits at absolute position i — true for every no-cache forward in
+    this codebase); cached/offset shapes fall back to the blocked reference.
+    ``"paged"`` concerns decode-over-pages only (handled in :func:`attention`
+    via the ``PagedKV`` cache type), so dense call sites treat it as
+    ``blocked``.
+    """
+    backend = backend or cfg.attn_backend
+    if backend == "flash" and q.shape[1] == k.shape[1]:
+        from repro.kernels.flash_attention import mha_flash
+
+        return mha_flash(q, k, v, causal=causal)
+    return blocked_attention(q, k, v, q_positions, causal=causal,
+                             kv_chunk=cfg.attn_kv_chunk)
+
+
+def _paged_decode(params, x, q, positions, seed, cfg: ModelConfig,
+                  paged: PagedKV, cache_index, method):
+    """Batched decode directly over the packed pool: quantize-scatter the new
+    token's KV, then run the fused paged-attention kernel.  S must be 1."""
+    hd, nkv = cfg.head_dim_, cfg.num_kv_heads
+    qc = cfg.quartet
+    k = _split_heads(L.dense(params["wk"], x, L.seed_fold(seed, 2), qc, method), nkv, hd)
+    v = _split_heads(L.dense(params["wv"], x, L.seed_fold(seed, 3), qc, method), nkv, hd)
+    if cfg.qk_norm:
+        k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    kleaf = next(iter(paged.pool.values()))
+    ps = kleaf.shape[1]
+    bidx = jnp.arange(x.shape[0])
+    page_ids = paged.tables[bidx, cache_index // ps]
+    pool = scatter_token(paged.pool, page_ids, cache_index % ps, k[:, 0], v[:, 0])
+    out = paged_attention(q[:, 0], pool, paged.tables, cache_index + 1)
+    return out[:, None], PagedKV(pool, paged.tables)
+
+
 def attention(
     params,
     x: jnp.ndarray,  # [B, S, D]
@@ -123,10 +184,11 @@ def attention(
     *,
     causal: bool = True,
     kv_source: jnp.ndarray | None = None,  # cross-attention source
-    kv_cache: tuple[jnp.ndarray, jnp.ndarray] | None = None,  # (k,v) [B,T,Hkv,hd]
+    kv_cache=None,  # (k,v) [B,T,Hkv,hd] | PagedKV | None
     cache_index: jnp.ndarray | None = None,  # [B] write position for decode
     write_kv: bool = False,  # (re)build a full KV cache from kv_source (prefill)
     method: str = "quartet",
+    backend: str | None = None,  # override cfg.attn_backend per call
 ):
     """Returns (out [B,S,D], new_kv_cache | None)."""
     hd, nq, nkv = cfg.head_dim_, cfg.num_heads, cfg.num_kv_heads
@@ -137,6 +199,12 @@ def attention(
         q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
     if cfg.pos_embed == "rope" and kv_source is None:
         q = L.apply_rope(q, positions, cfg.rope_theta)
+
+    if isinstance(kv_cache, PagedKV):
+        out, new_cache = _paged_decode(params, x, q, positions, seed, cfg,
+                                       kv_cache, cache_index, method)
+        out = out.reshape(*x.shape[:-1], nq * hd)
+        return L.dense(params["wo"], out, L.seed_fold(seed, 4), qc, method), new_cache
 
     new_cache = None
     if kv_cache is not None and cache_index is None and not write_kv:
@@ -164,9 +232,9 @@ def attention(
 
     # note: a causal mask on q_positions subsumes the cache-validity mask
     # (queries at position p never look past p), so no kv_valid is needed
-    out = blocked_attention(
+    out = dispatch_attention(
         q, k, v, positions, causal=causal and kv_source is None,
-        kv_chunk=cfg.attn_kv_chunk,
+        cfg=cfg, backend=backend,
     )
     out = out.reshape(*x.shape[:-1], nq * hd)
     out = L.dense(params["wo"], out, L.seed_fold(seed, 4), qc, method)

@@ -153,9 +153,12 @@ def init_moe_block(key, cfg: ModelConfig, dtype):
 
 def moe_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index, method):
     _, norm = L.make_norm(cfg.norm)
+    # causal flag + backend both come from cfg (attention dispatches through
+    # models.attention.dispatch_attention / the PagedKV decode path, exactly
+    # like dense_block — MoE layers get paged decode for free)
     h, new_cache = attention(
         params["attn"], norm(params["attn_norm"], x, cfg.norm_eps), positions,
-        L.seed_fold(seed, 100), cfg, causal=True,
+        L.seed_fold(seed, 100), cfg, causal=cfg.is_causal_lm,
         kv_cache=cache, cache_index=cache_index, method=method,
     )
     x = x + h

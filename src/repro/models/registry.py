@@ -47,7 +47,14 @@ def _stacked_spec(spec_fn, n):
     return f
 
 
-def build_model(cfg: ModelConfig) -> Model:
+def build_model(cfg: ModelConfig, *, attn_backend: str | None = None) -> Model:
+    """Build the family's Model; ``attn_backend`` overrides
+    ``cfg.attn_backend`` ("blocked" / "flash" / "paged") so callers (engine,
+    benchmarks) can select the attention backend without editing configs."""
+    if attn_backend is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
     fam = cfg.family
     if fam in ("dense", "moe", "ssm"):
         block_init = {"dense": init_dense_block, "moe": init_moe_block,

@@ -4,6 +4,13 @@ scan-over-layers with optional remat, Quartet linears throughout.
 This module also provides the generic LM scaffolding (embed → layer stack →
 norm → logits) reused by the MoE / SSM / hybrid / VLM families, which plug in
 their own layer body via the ``block_init`` / ``block_apply`` hooks.
+
+Attention routes through ``models.attention``'s backend dispatch
+(``ModelConfig.attn_backend``).  The per-layer ``caches`` threaded by the
+layer scan are either dense ``(k, v)`` tuples or — for the serving engine's
+batched decode — ``PagedKV`` pytrees (packed-pool leaves + page tables, both
+carrying the leading ``[L]`` axis the scan consumes), in which case attention
+runs the fused paged-attention kernel directly over the packed pages.
 """
 
 from __future__ import annotations

@@ -1,13 +1,14 @@
 """Continuous-batching serving engine with a paged (optionally MXFP4) KV cache."""
 
 from repro.serve.engine import Engine, EngineConfig
-from repro.serve.paged_cache import DenseSlotCache, PagedCache
+from repro.serve.paged_cache import DenseSlotCache, PagedCache, PagedKV
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
 __all__ = [
     "Engine",
     "EngineConfig",
     "PagedCache",
+    "PagedKV",
     "DenseSlotCache",
     "Request",
     "RequestState",

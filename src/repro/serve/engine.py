@@ -12,9 +12,14 @@ slots:
 
 Model families with positional attention KV (``dense``/``moe``) store their
 cache in :class:`PagedCache` pages — optionally MXFP4-packed (4.25
-bits/element) with quantize-on-write / dequantize-on-read.  Other families
-(SSM recurrent state, hybrid, enc-dec / VLM cross-KV) fall back to
-:class:`DenseSlotCache` but schedule identically.
+bits/element) with quantize-on-write.  Batched decode attends *directly over
+the packed pool* via the fused Pallas paged-attention kernel (the raw pool +
+int32 page tables are operands of the one jitted decode step; no dense
+[L, B, T, Hkv, hd] gather is ever materialized).  The legacy
+gather-dequantize decode survives as a parity oracle behind
+``EngineConfig(decode_backend="gather")``.  Other families (SSM recurrent
+state, hybrid, enc-dec / VLM cross-KV) fall back to :class:`DenseSlotCache`
+but schedule identically.
 
 Both paths reuse the same step builders as ``train.serve.greedy_generate``
 (``make_chunk_prefill_step`` / ``make_decode_step``), so engine outputs are
@@ -51,6 +56,11 @@ class EngineConfig:
     method: str = "quartet"
     eos_id: int | None = None
     keep_logits: bool = False  # record per-step logits on each Request (tests)
+    # batched-decode attention path for paged families:
+    #   None     — follow ModelConfig.attn_backend ("paged" unless overridden)
+    #   "paged"  — fused Pallas kernel directly over the packed pool (default)
+    #   "gather" — legacy gather-dequantize-to-dense oracle (parity testing)
+    decode_backend: str | None = None
 
 
 class Engine:
@@ -77,20 +87,43 @@ class Engine:
         ps = cfg.page_size
 
         if self.paged:
+            self.decode_backend = cfg.decode_backend or (
+                "paged" if model.cfg.attn_backend == "paged" else "gather")
+            if self.decode_backend not in ("paged", "gather"):
+                raise ValueError(f"decode_backend must be 'paged' or 'gather', "
+                                 f"got {self.decode_backend!r}")
+            n_layers = self.cache.layers
 
-            def decode_all(params, tokens, positions, pool, tables, mask):
-                """One decode step for every slot; masked lanes write to the
-                scratch page and their (meaningless) logits are discarded."""
-                pos_safe = jnp.where(mask, positions, 0)
-                kv = P.gather_pages(pool, tables, self._dtype)
-                logits, (k2, v2), _ = decode(params, tokens, pos_safe, kv)
-                bidx = jnp.arange(tokens.shape[0])
-                k_new = k2[:, bidx, pos_safe]  # [L, B, Hkv, hd]
-                v_new = v2[:, bidx, pos_safe]
-                page_ids = tables[bidx, pos_safe // ps]
-                page_ids = jnp.where(mask, page_ids, 0)
-                pool = P.scatter_tokens(pool, page_ids, pos_safe % ps, k_new, v_new)
-                return logits, pool
+            if self.decode_backend == "paged":
+
+                def decode_all(params, tokens, positions, pool, tables, mask):
+                    """One decode step for every slot, attending directly over
+                    the packed pool (no dense gather).  Masked lanes get an
+                    all-zero table row, so their quantize-on-write lands on
+                    the scratch page and their (meaningless) logits are
+                    discarded."""
+                    pos_safe = jnp.where(mask, positions, 0)
+                    tbl = jnp.where(mask[:, None], tables, 0)
+                    paged = P.PagedKV(
+                        pool=pool,
+                        tables=jnp.broadcast_to(tbl[None], (n_layers, *tbl.shape)))
+                    logits, new_caches, _ = decode(params, tokens, pos_safe, paged)
+                    return logits, new_caches.pool
+            else:
+
+                def decode_all(params, tokens, positions, pool, tables, mask):
+                    """Gather-dequantize parity oracle: materializes the dense
+                    [L, B, T, Hkv, hd] KV view each step."""
+                    pos_safe = jnp.where(mask, positions, 0)
+                    kv = P.gather_pages(pool, tables, self._dtype)
+                    logits, (k2, v2), _ = decode(params, tokens, pos_safe, kv)
+                    bidx = jnp.arange(tokens.shape[0])
+                    k_new = k2[:, bidx, pos_safe]  # [L, B, Hkv, hd]
+                    v_new = v2[:, bidx, pos_safe]
+                    page_ids = tables[bidx, pos_safe // ps]
+                    page_ids = jnp.where(mask, page_ids, 0)
+                    pool = P.scatter_tokens(pool, page_ids, pos_safe % ps, k_new, v_new)
+                    return logits, pool
 
             def prefill_chunk(params, tokens, start, table_row, pool, extra=None):
                 """tokens [1, C] at absolute positions start..start+C for the
@@ -108,6 +141,7 @@ class Engine:
             self._decode_all = jax.jit(decode_all)
             self._prefill_chunk = jax.jit(prefill_chunk)
         else:
+            self.decode_backend = "dense_slots"
 
             def decode_all(params, tokens, positions, caches, mask):
                 pos_safe = jnp.where(mask, positions, 0)

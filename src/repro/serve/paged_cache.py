@@ -27,7 +27,6 @@ queries reach ``p``, so garbage is unreachable by construction.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -36,21 +35,16 @@ import numpy as np
 
 from repro.core import formats as F
 from repro.core import quantizers as Q
+from repro.kernels.paged_attention import (  # noqa: F401  (re-exports)
+    PagedKV,
+    quant_fmt as _quant_fmt,
+    scatter_token,
+)
 from repro.models.registry import Model
-
-GROUP = 32
-
 
 # ---------------------------------------------------------------------------
 # pure (jit-traceable) pool ops
 # ---------------------------------------------------------------------------
-
-
-def _quant_fmt(hd: int) -> F.Format:
-    """MXFP4 with the block clamped to the head dim (blocks never straddle
-    heads; reduced configs use hd=32, full configs 128 — both divide)."""
-    block = GROUP if hd % GROUP == 0 else hd
-    return dataclasses.replace(F.MXFP4, block=block)
 
 
 def quantize_kv(x: jnp.ndarray) -> Q.PackedQuant:
@@ -70,6 +64,11 @@ def gather_pages(pool: dict, tables: jnp.ndarray, dtype) -> tuple[jnp.ndarray, j
 
     tables [B, n_pages_per_slot] int32 → (k, v) [L, B, T, Hkv, hd] with
     T = n_pages_per_slot · page_size, dequantizing if the pool is packed.
+
+    Used by per-slot chunked prefill (one slot's pages at a time) and by the
+    ``decode_backend="gather"`` parity oracle; the default batched decode
+    attends directly over the packed pool (``kernels/paged_attention``) and
+    never materializes this dense view.
     """
 
     def one(codes, scales=None):
@@ -186,6 +185,10 @@ class PagedCache:
         for pid in self.tables[slot]:
             if pid != 0:
                 self._free.append(int(pid))
+        # keep the free list sorted (descending) so the low-ids-first contract
+        # of pop() survives out-of-order retirement — allocation stays
+        # deterministic under any admission/finish interleaving
+        self._free.sort(reverse=True)
         self.tables[slot] = 0
 
     # -- accounting ---------------------------------------------------------

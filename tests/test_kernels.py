@@ -16,6 +16,8 @@ from repro.kernels.hadamard_quant import hadamard_quest_quantize
 from repro.kernels.mxfp4_matmul import mxfp4_matmul
 from repro.kernels.sr_hadamard_quant import sr_hadamard_quantize
 
+pytestmark = pytest.mark.kernels
+
 SHAPES = [(32, 32), (8, 64), (96, 256), (128, 96), (257, 64), (64, 1024)]
 BLOCKS = [(32, 32), (64, 128), (256, 512)]
 
