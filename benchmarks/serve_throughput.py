@@ -7,6 +7,12 @@ JSON report:
 
 * tokens/sec (decode throughput, wall clock, post-warmup) per configuration,
 * p50/p95 request latency and TTFT on the virtual serving clock,
+* tokens-per-decode-call and draft acceptance rate per configuration (plain
+  decoding sits at exactly 1.0 token/call; speculative decoding amortizes
+  each verify call over 1..k+1 emitted tokens),
+* a speculative on/off A/B (``spec`` section): greedy self-speculation over
+  the paged-kernel decode, dense + mxfp4 pools, with token-exactness vs the
+  non-speculative engine asserted,
 * persistent cache bytes dense vs FP4 and their ratio,
 * decode-step HBM traffic model: KV bytes touched per batched decode step by
   the fused paged-attention kernel (O(packed KV): read the packed pages in
@@ -84,9 +90,11 @@ def decode_kv_bytes_per_step(cache, backend: str) -> int:
 
 
 def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
-          max_new: int = 8, n_slots: int = 4, verify_parity: bool = True) -> dict:
+          max_new: int = 8, n_slots: int = 4, verify_parity: bool = True,
+          spec_k: int = 3, spec_proposer: str = "self") -> dict:
     from repro.launch.serve_engine import run_workload
-    from repro.serve import Engine, EngineConfig
+    from repro.serve import Engine, EngineConfig, SpecConfig
+    from repro.serve.spec import aggregate_stats
     from repro.train.serve import greedy_generate
 
     cfg, model, params = _build(arch, reduced)
@@ -95,14 +103,11 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
                     "n_requests": n_requests, "max_new": max_new,
                     "n_slots": n_slots}
 
-    outputs: dict = {}
-    report["decode_backends"] = {}
-    for kv, backend in (("dense", "paged"), ("dense", "gather"),
-                        ("mxfp4", "paged"), ("mxfp4", "gather")):
+    def run_config(kv, backend, spec=None):
         eng = Engine(model, params, EngineConfig(
             n_slots=n_slots, max_len=64, page_size=16, kv_dtype=kv,
-            prefill_chunk=16, decode_backend=backend))
-        # warmup: compile the three step shapes outside the timed region
+            prefill_chunk=16, decode_backend=backend, spec=spec))
+        # warmup: compile the step shapes outside the timed region
         eng.submit(workload[0][1], 2, arrival_time=0.0)
         eng.drain()
         eng.completed.clear()
@@ -111,7 +116,7 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
         done, _ = run_workload(eng, workload, verbose=False)
         wall = time.perf_counter() - t0
         toks = sum(len(r.tokens) for r in done)
-        outputs[(kv, backend)] = {r.rid: list(r.tokens) for r in done}
+        agg = aggregate_stats(done)
         stats = {
             "tokens_per_sec": round(toks / wall, 2),
             "wall_sec": round(wall, 3),
@@ -119,17 +124,35 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
             "latency_p95_s": round(_pct([r.latency() for r in done], 0.95), 4),
             "ttft_p50_s": round(_pct([r.ttft() for r in done], 0.5), 4),
             "ttft_p95_s": round(_pct([r.ttft() for r in done], 0.95), 4),
+            "tokens_per_decode_call": agg["tokens_per_decode_call"],
+            "acceptance_rate": agg["acceptance_rate"],
             "cache_bytes": eng.cache_bytes(),
             "bits_per_kv_elem": round(eng.cache.bits_per_element(), 2)
             if eng.paged else 16.0,
             "decode_kv_bytes_per_step":
             decode_kv_bytes_per_step(eng.cache, backend) if eng.paged else 0,
         }
+        return stats, {r.rid: list(r.tokens) for r in done}
+
+    outputs: dict = {}
+    report["decode_backends"] = {}
+    for kv, backend in (("dense", "paged"), ("dense", "gather"),
+                        ("mxfp4", "paged"), ("mxfp4", "gather")):
+        stats, outputs[(kv, backend)] = run_config(kv, backend)
         if backend == "paged":  # primary numbers, keyed by cache dtype
             report[kv] = stats
         report["decode_backends"][f"{kv}/{backend}"] = {
             k: stats[k] for k in
             ("tokens_per_sec", "wall_sec", "decode_kv_bytes_per_step")}
+
+    # -- speculative on/off A/B (paged-kernel decode, both pool dtypes) -----
+    report["spec"] = {"k": spec_k, "proposer": spec_proposer}
+    if cfg.family in ("dense", "moe"):
+        sc = SpecConfig(k=spec_k, proposer=spec_proposer)
+        for kv in ("dense", "mxfp4"):
+            stats, out = run_config(kv, "paged", spec=sc)
+            stats["parity_vs_nonspec"] = out == outputs[(kv, "paged")]
+            report["spec"][kv] = stats
 
     report["cache_ratio"] = round(
         report["dense"]["cache_bytes"] / report["mxfp4"]["cache_bytes"], 2)
@@ -164,7 +187,7 @@ def run():
     rep = bench()
     per_tok = max(rep["n_requests"] * rep["max_new"], 1)
     db = rep["decode_backends"]
-    return [
+    rows = [
         ("serve_fp4_tok_per_s", rep["mxfp4"]["wall_sec"] * 1e6 / per_tok,
          f"{rep['mxfp4']['tokens_per_sec']}tok/s"),
         ("serve_dense_tok_per_s", rep["dense"]["wall_sec"] * 1e6 / per_tok,
@@ -179,6 +202,15 @@ def run():
         ("serve_parity_paged_vs_gather", 0.0,
          str(rep["parity_paged_vs_gather_dense"])),
     ]
+    if "mxfp4" in rep.get("spec", {}):
+        sp = rep["spec"]["mxfp4"]
+        rows += [
+            ("serve_spec_tok_per_decode_call", 0.0,
+             f"{sp['tokens_per_decode_call']}tok/call"),
+            ("serve_spec_acceptance", 0.0, f"{sp['acceptance_rate']}"),
+            ("serve_spec_parity", 0.0, str(sp["parity_vs_nonspec"])),
+        ]
+    return rows
 
 
 def main():
@@ -189,24 +221,45 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--no-parity", action="store_true")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="drafted tokens per verify call in the spec A/B")
+    ap.add_argument("--spec-proposer", default="self",
+                    choices=["self", "ngram"],
+                    help="proposer for the spec A/B ('self' = parity oracle)")
     ap.add_argument("--smoke", action="store_true",
                     help="small fixed workload + assert the paged-kernel "
-                         "decode metrics and parity flags are present (CI)")
+                         "decode metrics, spec-mode parity, and "
+                         "tokens-per-decode-call > 1 (CI)")
     args = ap.parse_args()
     if args.smoke:
         args.reduced, args.requests, args.max_new, args.slots = True, 4, 4, 2
     rep = bench(args.arch, args.reduced, args.requests, args.max_new,
-                args.slots, verify_parity=not args.no_parity)
+                args.slots, verify_parity=not args.no_parity,
+                spec_k=args.spec_k, spec_proposer=args.spec_proposer)
     print(json.dumps(rep, indent=2))
     if args.smoke:
         for key in ("mxfp4/paged", "mxfp4/gather", "dense/paged"):
             assert key in rep["decode_backends"], f"missing decode metrics {key}"
             assert rep["decode_backends"][key]["decode_kv_bytes_per_step"] > 0
         assert rep["decode_bytes_ratio_gather_over_paged"] > 1.0
+        # non-spec decode emits exactly one token per batched call
+        assert rep["mxfp4"]["tokens_per_decode_call"] == 1.0
+        # spec A/B only exists for paged (dense/moe) families
+        for kv in ("dense", "mxfp4"):
+            if kv not in rep["spec"]:
+                continue
+            sp = rep["spec"][kv]
+            assert sp["parity_vs_nonspec"], \
+                f"PARITY FAILURE: spec({kv}) != non-spec engine"
+            assert sp["tokens_per_decode_call"] > 1.0, \
+                f"spec({kv}) tokens_per_decode_call not > 1"
+            assert 0.0 <= sp["acceptance_rate"] <= 1.0
     if rep.get("parity_dense_vs_sequential") is False:
         raise SystemExit("PARITY FAILURE: dense-cache engine != sequential greedy")
     if not rep["parity_paged_vs_gather_dense"]:
         raise SystemExit("PARITY FAILURE: paged-kernel decode != gather-dense decode")
+    if "dense" in rep["spec"] and not rep["spec"]["dense"]["parity_vs_nonspec"]:
+        raise SystemExit("PARITY FAILURE: speculative engine != non-speculative engine")
     if rep["cache_ratio"] < 3.0:
         raise SystemExit(f"cache ratio {rep['cache_ratio']} < 3x")
 

@@ -4,6 +4,7 @@ with staggered arrivals, for any architecture family.
   PYTHONPATH=src python examples/serve_batched.py                      # dense arch, FP4 KV pages
   PYTHONPATH=src python examples/serve_batched.py --kv dense           # parity mode
   PYTHONPATH=src python examples/serve_batched.py --arch falcon-mamba-7b   # SSM → dense slots
+  PYTHONPATH=src python examples/serve_batched.py --spec ngram --spec-k 4  # speculative decoding
 
 Requests arrive over the first few engine steps (not all at once), prompts
 range from 6 to 30 tokens, and there are more requests than decode slots —
@@ -21,7 +22,8 @@ import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.models import build_model
-from repro.serve import Engine, EngineConfig
+from repro.serve import Engine, EngineConfig, SpecConfig
+from repro.serve.spec import aggregate_stats
 from repro.train.serve import greedy_generate
 
 
@@ -42,6 +44,9 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=10)
     ap.add_argument("--kv", default="mxfp4", choices=["mxfp4", "dense"])
+    ap.add_argument("--spec", default=None, choices=["self", "ngram"],
+                    help="speculative decoding proposer (paged families)")
+    ap.add_argument("--spec-k", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -51,9 +56,11 @@ def main():
     rng = np.random.default_rng(0)
     extra = make_extra(cfg, key)
 
+    spec = (SpecConfig(k=args.spec_k, proposer=args.spec)
+            if args.spec is not None else None)
     engine = Engine(model, params, EngineConfig(
         n_slots=args.slots, max_len=48, page_size=8, kv_dtype=args.kv,
-        prefill_chunk=8))
+        prefill_chunk=8, spec=spec))
 
     # mixed prompt lengths, arrivals staggered over the first steps
     prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(6, 31)))
@@ -78,6 +85,11 @@ def main():
           f"{max(p.size for p in prompts)} prompt tokens) → {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s)")
     print(f"cache bytes: {engine.cache_bytes():,}")
+    if spec is not None:
+        agg = aggregate_stats(handles)
+        print(f"spec[{args.spec}, k={args.spec_k}]: "
+              f"{agg['tokens_per_decode_call']} tokens/verify-call, "
+              f"acceptance {agg['acceptance_rate']}")
     for h in handles[:3]:
         print(f"  req {h.rid}: prompt[{h.prompt_len}] -> {h.tokens}")
 

@@ -79,6 +79,12 @@ class ModelConfig:
     attn_backend: Literal["blocked", "flash", "paged"] = "paged"
     attn_q_chunk: int = 1024  # flash-style blocking for long sequences
     attn_kv_chunk: int = 1024
+    # True (default): S > 1 rows share row 0's positions for causal masks and
+    # rope angles — train/prefill rows are an identical arange, and per-row
+    # [B, S, …] masks/angles would hoist out of the layer scan as multi-GB
+    # loop invariants.  The speculative verify step builds its model with
+    # False: its rows sit at genuinely different per-slot offsets.
+    attn_rows_shared: bool = True
     remat: bool = True
     # "full": recompute everything (paper-faithful baseline);
     # "dots": save no-batch-dim dot outputs (skips fwd GEMM recompute — §Perf)

@@ -19,6 +19,13 @@ handles ragged batches, and fully-invalid pages are skipped with ``pl.when``
 (their DMA fetches the scratch page the allocator parks unmapped table
 entries on).
 
+Queries may carry a token axis (``q [B, S, Hq, hd]``): the speculative
+verify scores the last accepted token plus S-1 drafted tokens per slot in
+the same single pass — the query block grows to ``S·group`` rows and each
+row's causal bound is offset by its token index (row ``r`` sees positions
+≤ ``lengths[b] - 1 + r // group``), so drafts never attend past themselves.
+Plain decode is the S == 1 special case of the same kernel.
+
 ``PagedKV`` is the pytree that threads this state through the model's
 layer scan: pool leaves carry a leading ``[L]`` axis and are consumed one
 layer-slice per scan step; ``tables`` is broadcast to ``[L, B, P]`` so each
@@ -80,11 +87,13 @@ def quant_fmt(hd: int) -> F.Format:
 
 def scatter_token(pool: dict, page_ids: jnp.ndarray, offsets: jnp.ndarray,
                   k_new: jnp.ndarray, v_new: jnp.ndarray) -> dict:
-    """Write one token per slot into a single layer's pool slice.
+    """Write tokens into a single layer's pool slice.
 
-    page_ids/offsets [B]; k_new/v_new [B, Hkv, hd].  Quantize-on-write in
-    packed mode.  Duplicate (page, offset) pairs (masked lanes redirected to
-    the scratch page) resolve arbitrarily — scratch contents are never read.
+    page_ids/offsets share any leading shape ``[...]`` (``[B]`` for decode,
+    ``[B, S]`` for a speculative verify burst); k_new/v_new are
+    ``[..., Hkv, hd]``.  Quantize-on-write in packed mode.  Duplicate
+    (page, offset) pairs (masked lanes redirected to the scratch page)
+    resolve arbitrarily — scratch contents are never read.
     """
     if "k" in pool:
         return {
@@ -107,9 +116,10 @@ def scatter_token(pool: dict, page_ids: jnp.ndarray, offsets: jnp.ndarray,
 
 
 def _online_softmax_tile(q, k, v, kv_pos, q_pos, m_ref, l_ref, acc_ref):
-    """One [group, ps] score tile folded into the running (m, l, acc)."""
+    """One [rows, ps] score tile folded into the running (m, l, acc);
+    ``q_pos`` is [rows, 1] — each query row carries its own causal bound."""
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [group, ps]
+                            preferred_element_type=jnp.float32)  # [rows, ps]
     s = jnp.where(kv_pos <= q_pos, s, NEG_INF)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -122,10 +132,17 @@ def _online_softmax_tile(q, k, v, kv_pos, q_pos, m_ref, l_ref, acc_ref):
 
 
 def _paged_kernel(tbl_ref, len_ref, q_ref, *rest,
-                  load_kv, ps: int, n_pp: int, scale: float):
+                  load_kv, ps: int, n_pp: int, group: int, n_q: int,
+                  scale: float):
     """One (slot, KV-head, page) step; ``load_kv(kv_refs)`` materializes the
     page's [ps, hd] f32 K/V tiles (pool-dtype-specific — the only part that
-    differs between the packed and dense pools)."""
+    differs between the packed and dense pools).
+
+    The query block is [n_q·group, hd]: ``n_q`` consecutive decode/verify
+    tokens × the KV head's GQA group.  Row ``r`` belongs to query token
+    ``r // group`` sitting at absolute position ``len_ref[b] - 1 + r//group``
+    — speculative verify scores all drafted tokens in one pass with per-row
+    causal bounds; plain decode is the n_q == 1 special case."""
     *kv_refs, o_ref, m_ref, l_ref, acc_ref = rest
     b, p = pl.program_id(0), pl.program_id(2)
 
@@ -135,14 +152,16 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, *rest,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    length = len_ref[b]
+    length = len_ref[b]  # tokens visible to the FIRST query row
 
-    @pl.when(p * ps < length)
+    @pl.when(p * ps < length + n_q - 1)
     def _body():
-        q = q_ref[0, 0].astype(jnp.float32) * scale  # [group, hd]
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [n_q*group, hd]
         k, v = load_kv(kv_refs)
         kv_pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-        _online_softmax_tile(q, k, v, kv_pos, length - 1, m_ref, l_ref, acc_ref)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (n_q * group, 1), 0)
+        q_pos = length - 1 + rows // group
+        _online_softmax_tile(q, k, v, kv_pos, q_pos, m_ref, l_ref, acc_ref)
 
     @pl.when(p == n_pp - 1)
     def _flush():
@@ -170,21 +189,34 @@ def _load_kv_dense(kv_refs):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(
-    q: jnp.ndarray,  # [B, Hq, hd] — one decode query per slot
+    q: jnp.ndarray,  # [B, Hq, hd] (one decode query per slot) or [B, S, Hq, hd]
     pool: dict,  # one layer's pool slice (packed or dense leaves)
     tables: jnp.ndarray,  # [B, pages_per_slot] int32
-    lengths: jnp.ndarray,  # [B] int32 — visible tokens per slot (position + 1)
+    lengths: jnp.ndarray,  # [B] int32 — tokens visible to the FIRST query
+    #                        (its position + 1); query s sees lengths + s
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Decode attention directly over the paged pool → [B, Hq, hd]."""
-    B, Hq, hd = q.shape
+    """Decode/verify attention directly over the paged pool.
+
+    ``q`` may carry a token axis S > 1 (speculative verify: the last accepted
+    token plus the drafted suffix) — all S tokens of a slot are scored in one
+    grid pass with per-row causal bounds.  Returns [B, Hq, hd] for 3-d ``q``,
+    [B, S, Hq, hd] for 4-d."""
+    multi = q.ndim == 4
+    if not multi:
+        q = q[:, None]
+    B, S, Hq, hd = q.shape
     quantized = "k_codes" in pool
     kleaf = pool["k_codes"] if quantized else pool["k"]
     ps, Hkv = kleaf.shape[1], kleaf.shape[2]
     group = Hq // Hkv
     n_pp = tables.shape[1]
     scale = 1.0 / np.sqrt(hd)
-    qg = q.reshape(B, Hkv, group, hd)
+    # [B, S, Hkv, group, hd] → [B, Hkv, S·group, hd]: row r = token r//group,
+    # query head (r%group) of the program's KV head
+    qg = (q.reshape(B, S, Hkv, group, hd)
+          .transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, S * group, hd))
 
     def kv_idx(b, h, p, tbl, ln):
         del ln
@@ -212,24 +244,28 @@ def paged_attention(
             pl.BlockSpec((1, ps, 1, hd), kv_idx),
         ]
         operands = (pool["k"], pool["v"])
+    rows = S * group
     kern = functools.partial(_paged_kernel, load_kv=load_kv, ps=ps, n_pp=n_pp,
-                             scale=scale)
+                             group=group, n_q=S, scale=scale)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, n_pp),
-        in_specs=[pl.BlockSpec((1, 1, group, hd), q_idx), *kv_specs],
-        out_specs=pl.BlockSpec((1, 1, group, hd), q_idx),
+        in_specs=[pl.BlockSpec((1, 1, rows, hd), q_idx), *kv_specs],
+        out_specs=pl.BlockSpec((1, 1, rows, hd), q_idx),
         scratch_shapes=[
-            pltpu.VMEM((group, 1), jnp.float32),  # running max
-            pltpu.VMEM((group, 1), jnp.float32),  # running denom
-            pltpu.VMEM((group, hd), jnp.float32),  # running numerator
+            pltpu.VMEM((rows, 1), jnp.float32),  # running max
+            pltpu.VMEM((rows, 1), jnp.float32),  # running denom
+            pltpu.VMEM((rows, hd), jnp.float32),  # running numerator
         ],
     )
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rows, hd), q.dtype),
         interpret=interpret,
     )(tables, lengths, qg, *operands)
-    return out.reshape(B, Hq, hd)
+    out = (out.reshape(B, Hkv, S, group, hd)
+           .transpose(0, 2, 1, 3, 4)
+           .reshape(B, S, Hq, hd))
+    return out if multi else out[:, 0]

@@ -7,6 +7,11 @@
 each ``Engine.step`` advances time by its measured wall duration, and
 requests are submitted the moment the clock passes their arrival time —
 so queueing behaviour is faithful even though steps are synchronous.
+
+``--spec {self,ngram,draft} --spec-k 4`` turns on speculative decoding
+(paged families; ``--draft-arch`` selects the draft model for the ``draft``
+proposer) and reports tokens-per-verify-call and draft acceptance;
+``--temperature/--top-k/--top-p/--sample-seed`` enable per-request sampling.
 """
 
 from __future__ import annotations
@@ -22,7 +27,8 @@ from repro.configs import get_config, get_reduced_config
 from repro.distributed.context import activate_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
-from repro.serve import Engine, EngineConfig
+from repro.serve import Engine, EngineConfig, SamplingParams, SpecConfig
+from repro.serve.spec import aggregate_stats
 
 
 def make_extra(cfg, key, batch: int = 1):
@@ -46,14 +52,16 @@ def poisson_workload(rng: np.random.Generator, n: int, rate: float,
     return out
 
 
-def run_workload(engine: Engine, workload, extra=None, verbose: bool = True):
+def run_workload(engine: Engine, workload, extra=None, verbose: bool = True,
+                 sampling=None):
     """Drive the engine on a virtual clock; returns (requests, elapsed)."""
     pending = list(workload)
     clock, t0 = 0.0, time.perf_counter()
     while pending or engine.sched.pending:
         while pending and pending[0][0] <= clock:
             at, prompt, max_new = pending.pop(0)
-            engine.submit(prompt, max_new, extra=extra, arrival_time=at)
+            engine.submit(prompt, max_new, extra=extra, arrival_time=at,
+                          sampling=sampling)
         if not engine.sched.pending:  # idle gap: jump to the next arrival
             clock = pending[0][0]
             continue
@@ -86,6 +94,21 @@ def main():
                          "(default) vs gather-dequantize oracle")
     ap.add_argument("--method", default="quartet")
     ap.add_argument("--seed", type=int, default=0)
+    # speculative decoding (paged families)
+    ap.add_argument("--spec", default=None,
+                    choices=["self", "ngram", "draft"],
+                    help="enable speculative decoding with this proposer")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify call")
+    ap.add_argument("--ngram", type=int, default=2,
+                    help="ngram proposer: suffix length to match")
+    ap.add_argument("--draft-arch", default=None,
+                    help="draft proposer: registry arch of the draft model")
+    # per-request sampling (greedy argmax when temperature is 0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--sample-seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = (get_reduced_config(args.arch) if args.reduced else get_config(args.arch))
@@ -96,25 +119,44 @@ def main():
     workload = poisson_workload(rng, args.requests, args.rate, args.min_prompt,
                                 args.max_prompt, args.max_new, cfg.vocab_size)
 
+    spec = None
+    if args.spec is not None:
+        spec = SpecConfig(k=args.spec_k, proposer=args.spec, ngram=args.ngram,
+                          draft_arch=args.draft_arch)
+    sampling = None
+    if args.temperature > 0:
+        sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                                  top_p=args.top_p, seed=args.sample_seed)
+    elif args.top_k or args.top_p < 1.0 or args.sample_seed:
+        ap.error("--top-k/--top-p/--sample-seed require --temperature > 0 "
+                 "(temperature 0 is greedy argmax and ignores them)")
+
     with activate_mesh(make_local_mesh()):
         engine = Engine(model, params, EngineConfig(
             n_slots=args.slots, max_len=args.max_len, page_size=args.page_size,
             kv_dtype=args.kv, prefill_chunk=args.prefill_chunk, method=args.method,
-            decode_backend=args.decode_backend))
-        done, elapsed = run_workload(engine, workload, extra=make_extra(cfg, key))
+            decode_backend=args.decode_backend, spec=spec))
+        done, elapsed = run_workload(engine, workload, extra=make_extra(cfg, key),
+                                     sampling=sampling)
 
     total_tokens = sum(len(r.tokens) for r in done)
     lats = sorted(r.latency() for r in done)
     ttfts = sorted(r.ttft() for r in done)
     pct = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
     print(f"\n{cfg.name} [{cfg.family}] kv={args.kv if engine.paged else 'dense-slots'}"
-          f" decode={engine.decode_backend} slots={args.slots}")
+          f" decode={engine.decode_backend} slots={args.slots}"
+          + (f" spec={args.spec}(k={args.spec_k})" if spec else ""))
     print(f"  {len(done)} requests, {total_tokens} tokens in {elapsed:.2f}s wall "
           f"→ {total_tokens / elapsed:.1f} tok/s")
     print(f"  latency p50={pct(lats, 0.5):.3f}s p95={pct(lats, 0.95):.3f}s | "
           f"ttft p50={pct(ttfts, 0.5):.3f}s p95={pct(ttfts, 0.95):.3f}s (virtual)")
     print(f"  cache bytes: {engine.cache_bytes():,}"
           + (f" ({engine.cache.bits_per_element():.2f} bits/elem)" if engine.paged else ""))
+    if spec is not None:
+        agg = aggregate_stats(done)
+        print(f"  spec: {agg['tokens_per_decode_call']} tok/verify-call, "
+              f"acceptance {agg['acceptance_rate']} "
+              f"({agg['drafts_accepted']}/{agg['drafts_proposed']} drafts)")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,9 @@ def blocked_attention(
     q_positions: jnp.ndarray,  # [B, S] absolute positions
     causal: bool,
     kv_chunk: int,
+    shared_mask: bool = True,  # rows share q_positions (train/prefill); False
+    #                            for batched multi-token verify (per-slot
+    #                            starts → genuinely per-row masks)
 ) -> jnp.ndarray:
     B, S, Hq, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
@@ -80,9 +83,10 @@ def blocked_attention(
     # For S > 1 (train/prefill) every batch row uses the same arange
     # positions; building the mask per-row would materialize a [B,S,ck] pred
     # that XLA hoists out of the layer scan as a multi-GB loop invariant.
-    # Row-shared masks are [S, ck] — 1000× smaller.  Decode (S == 1) has
-    # genuinely per-row positions but the mask is tiny.
-    shared_rows = S > 1
+    # Row-shared masks are [S, ck] — 1000× smaller.  Decode (S == 1) and the
+    # spec-verify burst (shared_mask=False: each slot starts at its own
+    # position) keep genuinely per-row positions; both are small shapes.
+    shared_rows = S > 1 and shared_mask
     mpos = q_positions[:1] if shared_rows else q_positions  # [1|B, S]
 
     qf = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, group, hd)
@@ -134,6 +138,7 @@ def dispatch_attention(
     causal: bool,
     cfg: ModelConfig,
     backend: str | None = None,
+    shared_mask: bool = True,
 ) -> jnp.ndarray:
     """Single dense-attention call site: backend from ``cfg.attn_backend``.
 
@@ -142,21 +147,26 @@ def dispatch_attention(
     this codebase); cached/offset shapes fall back to the blocked reference.
     ``"paged"`` concerns decode-over-pages only (handled in :func:`attention`
     via the ``PagedKV`` cache type), so dense call sites treat it as
-    ``blocked``.
+    ``blocked``.  ``shared_mask=False`` forces per-row causal masks (batched
+    multi-token verify, where every slot starts at its own position).
     """
     backend = backend or cfg.attn_backend
-    if backend == "flash" and q.shape[1] == k.shape[1]:
+    if backend == "flash" and q.shape[1] == k.shape[1] and shared_mask:
         from repro.kernels.flash_attention import mha_flash
 
         return mha_flash(q, k, v, causal=causal)
     return blocked_attention(q, k, v, q_positions, causal=causal,
-                             kv_chunk=cfg.attn_kv_chunk)
+                             kv_chunk=cfg.attn_kv_chunk,
+                             shared_mask=shared_mask)
 
 
 def _paged_decode(params, x, q, positions, seed, cfg: ModelConfig,
-                  paged: PagedKV, cache_index, method):
-    """Batched decode directly over the packed pool: quantize-scatter the new
-    token's KV, then run the fused paged-attention kernel.  S must be 1."""
+                  paged: PagedKV, method):
+    """Batched decode/verify directly over the packed pool: quantize-scatter
+    the S new tokens' KV (positions[b, s] drives the page lookup), then run
+    the fused paged-attention kernel with per-row causal bounds.  S == 1 is
+    plain decode; S > 1 is the speculative verify step (last accepted token +
+    drafted suffix scored in one call)."""
     hd, nkv = cfg.head_dim_, cfg.num_kv_heads
     qc = cfg.quartet
     k = _split_heads(L.dense(params["wk"], x, L.seed_fold(seed, 2), qc, method), nkv, hd)
@@ -164,15 +174,21 @@ def _paged_decode(params, x, q, positions, seed, cfg: ModelConfig,
     if cfg.qk_norm:
         k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
     if cfg.pos_embed == "rope":
-        k = L.apply_rope(k, positions, cfg.rope_theta)
+        # slots sit at genuinely different offsets — never share row 0's angles
+        k = L.apply_rope(k, positions, cfg.rope_theta, shared=False)
 
     kleaf = next(iter(paged.pool.values()))
     ps = kleaf.shape[1]
-    bidx = jnp.arange(x.shape[0])
-    page_ids = paged.tables[bidx, cache_index // ps]
-    pool = scatter_token(paged.pool, page_ids, cache_index % ps, k[:, 0], v[:, 0])
-    out = paged_attention(q[:, 0], pool, paged.tables, cache_index + 1)
-    return out[:, None], PagedKV(pool, paged.tables)
+    B, S = x.shape[0], x.shape[1]
+    bidx = jnp.arange(B)
+    page_ids = paged.tables[bidx[:, None], positions // ps]  # [B, S]
+    pool = scatter_token(paged.pool, page_ids, positions % ps, k, v)
+    lengths = positions[:, 0] + 1  # visible to the first query row
+    if S == 1:
+        out = paged_attention(q[:, 0], pool, paged.tables, lengths)[:, None]
+    else:
+        out = paged_attention(q, pool, paged.tables, lengths)
+    return out, PagedKV(pool, paged.tables)
 
 
 def attention(
@@ -193,16 +209,23 @@ def attention(
     """Returns (out [B,S,D], new_kv_cache | None)."""
     hd, nq, nkv = cfg.head_dim_, cfg.num_heads, cfg.num_kv_heads
     qc = cfg.quartet
+    # rows share positions (one arange) in training/prefill forwards; the
+    # speculative verify scores rows at per-slot offsets and opts out via
+    # its own model build (make_verify_step → attn_rows_shared=False)
+    rows_shared = cfg.attn_rows_shared
 
     q = _split_heads(L.dense(params["wq"], x, L.seed_fold(seed, 1), qc, method), nq, hd)
     if cfg.qk_norm:
         q = L.rmsnorm(params["q_norm"], q, cfg.norm_eps)
     if cfg.pos_embed == "rope" and kv_source is None:
-        q = L.apply_rope(q, positions, cfg.rope_theta)
+        q = L.apply_rope(q, positions, cfg.rope_theta, shared=rows_shared)
 
     if isinstance(kv_cache, PagedKV):
+        # positions alone drives the paged path: page lookup, quantize-
+        # scatter, and the kernel's per-row causal bounds (cache_index is
+        # redundant with positions[:, 0] here)
         out, new_cache = _paged_decode(params, x, q, positions, seed, cfg,
-                                       kv_cache, cache_index, method)
+                                       kv_cache, method)
         out = out.reshape(*x.shape[:-1], nq * hd)
         return L.dense(params["wo"], out, L.seed_fold(seed, 4), qc, method), new_cache
 
@@ -218,7 +241,7 @@ def attention(
         if cfg.qk_norm:
             k = L.rmsnorm(params["k_norm"], k, cfg.norm_eps)
         if cfg.pos_embed == "rope" and kv_source is None:
-            k = L.apply_rope(k, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta, shared=rows_shared)
         if write_kv:  # build a full cache from kv_source (cross-attn prefill)
             new_cache = (k, v)
         elif kv_cache is not None:  # decode/prefill: insert S new entries at index
@@ -231,10 +254,12 @@ def attention(
             new_cache = (ck_, cv_)
 
     # note: a causal mask on q_positions subsumes the cache-validity mask
-    # (queries at position p never look past p), so no kv_valid is needed
+    # (queries at position p never look past p), so no kv_valid is needed.
+    # Rows share one mask except when a batch of cached sequences is scored
+    # at per-slot offsets (gather-backend spec verify): B > 1 ∧ cache writes.
     out = dispatch_attention(
         q, k, v, positions, causal=causal and kv_source is None,
-        cfg=cfg, backend=backend,
+        cfg=cfg, backend=backend, shared_mask=rows_shared,
     )
     out = out.reshape(*x.shape[:-1], nq * hd)
     out = L.dense(params["wo"], out, L.seed_fold(seed, 4), qc, method)

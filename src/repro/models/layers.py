@@ -99,14 +99,19 @@ def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
 
 
-def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: [B, S, H, hd]; positions: [B, S] (absolute token positions)."""
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               shared: bool = True) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] (absolute token positions).
+
+    ``shared=True``: train/prefill positions are row-identical arange:
+    computing cos/sin per row materializes a [B,S,hd] f32 loop invariant —
+    share row 0 across rows and let broadcasting fuse it.  Decode (S == 1)
+    keeps per-row positions either way.  ``shared=False`` is required when
+    S > 1 rows genuinely sit at different offsets (the speculative verify
+    burst: each slot scores its drafted suffix from its own position)."""
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)  # [hd/2]
-    # train/prefill positions are row-identical arange: computing cos/sin per
-    # row materializes a [B,S,hd] f32 loop invariant — share across rows and
-    # let broadcasting fuse it.  Decode (S == 1) keeps per-row positions.
-    if x.shape[1] > 1:
+    if x.shape[1] > 1 and shared:
         positions = positions[:1]
     ang = positions[..., None].astype(jnp.float32) * freqs  # [1|B, S, hd/2]
     cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]

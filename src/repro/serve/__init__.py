@@ -1,8 +1,11 @@
-"""Continuous-batching serving engine with a paged (optionally MXFP4) KV cache."""
+"""Continuous-batching serving engine with a paged (optionally MXFP4) KV
+cache, per-request sampling, and speculative decoding."""
 
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.paged_cache import DenseSlotCache, PagedCache, PagedKV
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.spec import SpecConfig
 
 __all__ = [
     "Engine",
@@ -13,4 +16,6 @@ __all__ = [
     "Request",
     "RequestState",
     "Scheduler",
+    "SamplingParams",
+    "SpecConfig",
 ]

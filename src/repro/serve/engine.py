@@ -3,11 +3,11 @@
 ``Engine`` multiplexes many generation requests over a fixed set of decode
 slots:
 
-* ``submit(prompt, max_new) -> Request`` queues work (the returned object is
-  the handle; ``.tokens`` fills in as the engine runs),
+* ``submit(prompt, max_new, sampling=...) -> Request`` queues work (the
+  returned object is the handle; ``.tokens`` fills in as the engine runs),
 * ``step()`` advances the world by one scheduler tick: admit queued requests
   into free slots, run one chunked-prefill call per prefilling request, then
-  step every decoding slot in **one** jitted decode call,
+  step every decoding slot in **one** jitted call,
 * ``drain()`` steps until nothing is queued or active.
 
 Model families with positional attention KV (``dense``/``moe``) store their
@@ -21,11 +21,30 @@ gather-dequantize decode survives as a parity oracle behind
 state, hybrid, enc-dec / VLM cross-KV) fall back to :class:`DenseSlotCache`
 but schedule identically.
 
+**Speculative decoding** (``EngineConfig(spec=SpecConfig(...))``, paged
+families): each decode tick becomes draft → verify → accept.  A pluggable
+proposer (``serve.spec.proposers``) drafts ``k`` tokens per slot; ONE jitted
+verify call scores all ``k + 1`` tokens per slot directly over the packed
+pool (multi-query paged-attention with per-row causal bounds); the host
+accepts the longest draft prefix the target model itself reproduces and
+emits 1..k+1 tokens.  Rejected suffixes are rolled back with
+``PagedCache.truncate`` — the slot's logical length shrinks and
+now-unreferenced trailing pages return to the free list.  Greedy
+self-speculation is token-exact against the non-speculative engine (the
+extended parity-oracle contract).
+
+Sampling is per request (:class:`~repro.serve.sampling.SamplingParams`):
+greedy argmax by default; temperature / top-k / top-p draws use stateless
+per-token keys, which is also what lets the speculative verifier re-draw any
+drafted position independently.
+
 Both paths reuse the same step builders as ``train.serve.greedy_generate``
-(``make_chunk_prefill_step`` / ``make_decode_step``), so engine outputs are
-token-for-token those of the reference loop in dense-cache mode.  Exactly
-three shapes compile per engine: the ``[n_slots]`` decode, the
-``[1, prefill_chunk]`` prefill chunk, and the ``[1, 1]`` remainder chunk.
+(``make_chunk_prefill_step`` / ``make_decode_step`` / ``make_verify_step``
+via :func:`repro.serve.steps.build_paged_steps`), so engine outputs are
+token-for-token those of the reference loop in dense-cache mode.  At most
+four shapes compile per engine: the ``[n_slots]`` decode, the
+``[n_slots, k+1]`` verify, the ``[1, prefill_chunk]`` prefill chunk, and the
+``[1, 1]`` remainder chunk.
 """
 
 from __future__ import annotations
@@ -40,7 +59,12 @@ import numpy as np
 
 from repro.models.registry import Model
 from repro.serve import paged_cache as P
+from repro.serve.sampling import SamplingParams, get_sampler
 from repro.serve.scheduler import Request, RequestState, Scheduler
+from repro.serve.spec.config import SpecConfig
+from repro.serve.spec.proposers import build_proposer
+from repro.serve.spec.verify import accept_tokens
+from repro.serve.steps import build_paged_steps
 from repro.train.serve import make_chunk_prefill_step, make_decode_step
 
 PAGED_FAMILIES = ("dense", "moe")
@@ -61,6 +85,8 @@ class EngineConfig:
     #   "paged"  — fused Pallas kernel directly over the packed pool (default)
     #   "gather" — legacy gather-dequantize-to-dense oracle (parity testing)
     decode_backend: str | None = None
+    # speculative decoding (paged families only); None → plain decode
+    spec: SpecConfig | None = None
 
 
 class Engine:
@@ -68,80 +94,39 @@ class Engine:
         self.model, self.params = model, params
         self.config = cfg = config or EngineConfig()
         self.paged = model.cfg.family in PAGED_FAMILIES
+        self.spec = cfg.spec
+        if self.spec is not None and not self.paged:
+            raise ValueError(
+                f"speculative decoding needs a paged family (dense/moe), "
+                f"got {model.cfg.family!r}")
         self.sched = Scheduler(cfg.n_slots, cfg.max_len, cfg.prefill_chunk)
         self.completed: list[Request] = []
         self._dtype = jnp.dtype(model.cfg.dtype)
         self.steps = 0
 
         if self.paged:
-            pages_per_slot = -(-cfg.max_len // cfg.page_size)
+            # +k headroom: a verify burst writes up to k positions past the
+            # request's reserved prompt+max_new window; ``ensure`` maps those
+            # pages on demand and ``truncate`` returns the unused ones
+            spec_k = self.spec.k if self.spec else 0
+            pages_per_slot = -(-(cfg.max_len + spec_k) // cfg.page_size)
             self.cache = P.PagedCache(
                 model, n_slots=cfg.n_slots, pages_per_slot=pages_per_slot,
                 page_size=cfg.page_size, kv_dtype=cfg.kv_dtype)
+            self.decode_backend = cfg.decode_backend or (
+                "paged" if model.cfg.attn_backend == "paged" else "gather")
+            self._steps = build_paged_steps(
+                model, method=cfg.method, page_size=cfg.page_size,
+                n_layers=self.cache.layers, decode_backend=self.decode_backend)
+            self._decode_all = self._steps.decode_all
+            self._prefill_chunk = self._steps.prefill_chunk
+            self._verify_all = self._steps.verify_all
         else:
             self.cache = P.DenseSlotCache(model, n_slots=cfg.n_slots,
                                           max_len=cfg.max_len)
-
-        decode = make_decode_step(model, method=cfg.method)
-        chunk = make_chunk_prefill_step(model, method=cfg.method)
-        ps = cfg.page_size
-
-        if self.paged:
-            self.decode_backend = cfg.decode_backend or (
-                "paged" if model.cfg.attn_backend == "paged" else "gather")
-            if self.decode_backend not in ("paged", "gather"):
-                raise ValueError(f"decode_backend must be 'paged' or 'gather', "
-                                 f"got {self.decode_backend!r}")
-            n_layers = self.cache.layers
-
-            if self.decode_backend == "paged":
-
-                def decode_all(params, tokens, positions, pool, tables, mask):
-                    """One decode step for every slot, attending directly over
-                    the packed pool (no dense gather).  Masked lanes get an
-                    all-zero table row, so their quantize-on-write lands on
-                    the scratch page and their (meaningless) logits are
-                    discarded."""
-                    pos_safe = jnp.where(mask, positions, 0)
-                    tbl = jnp.where(mask[:, None], tables, 0)
-                    paged = P.PagedKV(
-                        pool=pool,
-                        tables=jnp.broadcast_to(tbl[None], (n_layers, *tbl.shape)))
-                    logits, new_caches, _ = decode(params, tokens, pos_safe, paged)
-                    return logits, new_caches.pool
-            else:
-
-                def decode_all(params, tokens, positions, pool, tables, mask):
-                    """Gather-dequantize parity oracle: materializes the dense
-                    [L, B, T, Hkv, hd] KV view each step."""
-                    pos_safe = jnp.where(mask, positions, 0)
-                    kv = P.gather_pages(pool, tables, self._dtype)
-                    logits, (k2, v2), _ = decode(params, tokens, pos_safe, kv)
-                    bidx = jnp.arange(tokens.shape[0])
-                    k_new = k2[:, bidx, pos_safe]  # [L, B, Hkv, hd]
-                    v_new = v2[:, bidx, pos_safe]
-                    page_ids = tables[bidx, pos_safe // ps]
-                    page_ids = jnp.where(mask, page_ids, 0)
-                    pool = P.scatter_tokens(pool, page_ids, pos_safe % ps, k_new, v_new)
-                    return logits, pool
-
-            def prefill_chunk(params, tokens, start, table_row, pool, extra=None):
-                """tokens [1, C] at absolute positions start..start+C for the
-                slot mapped by ``table_row`` → (last-token logits, pool)."""
-                kv = P.gather_pages(pool, table_row[None], self._dtype)
-                logits, (k2, v2), _ = chunk(
-                    params, tokens, jnp.full((1,), start, jnp.int32), kv, extra)
-                C = tokens.shape[1]
-                k_c = jax.lax.dynamic_slice_in_dim(k2, start, C, axis=2)[:, 0]
-                v_c = jax.lax.dynamic_slice_in_dim(v2, start, C, axis=2)[:, 0]
-                pos = start + jnp.arange(C)
-                pool = P.scatter_tokens(pool, table_row[pos // ps], pos % ps, k_c, v_c)
-                return logits, pool
-
-            self._decode_all = jax.jit(decode_all)
-            self._prefill_chunk = jax.jit(prefill_chunk)
-        else:
             self.decode_backend = "dense_slots"
+            decode = make_decode_step(model, method=cfg.method)
+            chunk = make_chunk_prefill_step(model, method=cfg.method)
 
             def decode_all(params, tokens, positions, caches, mask):
                 pos_safe = jnp.where(mask, positions, 0)
@@ -157,16 +142,22 @@ class Engine:
             self._decode_all = jax.jit(decode_all)
             self._prefill_chunk = jax.jit(prefill_chunk)
 
+        self.proposer = (build_proposer(self, self.spec)
+                         if self.spec is not None else None)
+
     # ------------------------------------------------------------------ API
 
     def submit(self, prompt, max_new: int, extra: Any = None,
-               arrival_time: float | None = None) -> Request:
+               arrival_time: float | None = None,
+               sampling: SamplingParams | None = None) -> Request:
         now = time.monotonic() if arrival_time is None else arrival_time
-        return self.sched.submit(prompt, max_new, extra=extra, arrival_time=now)
+        return self.sched.submit(prompt, max_new, extra=extra, arrival_time=now,
+                                 sampling=sampling)
 
     def step(self, now: float | None = None) -> dict:
-        """One scheduler tick: admit → chunked prefill → batched decode →
-        retire.  Returns a small summary dict (counts) for driver loops."""
+        """One scheduler tick: admit → chunked prefill → batched decode (or
+        draft/verify/accept with speculation on) → retire.  Returns a small
+        summary dict (counts) for driver loops."""
         now = time.monotonic() if now is None else now
         cfg = self.config
 
@@ -182,15 +173,20 @@ class Engine:
                 self.cache.alloc(req.slot, req.prompt_len + req.max_new)
             else:
                 self.cache.reset_slot(req.slot)
+            if self.proposer is not None:
+                self.proposer.on_admit(req)
 
         # -- chunked prefill (one chunk per prefilling request per tick) ----
         for req in self.sched.prefilling():
             self._advance_prefill(req, now)
 
-        # -- one batched decode over all decoding slots ---------------------
+        # -- one batched decode/verify over all decoding slots ---------------
         decoding = self.sched.decoding()
         if decoding:
-            self._decode_tick(decoding, now)
+            if self.spec is not None:
+                self._spec_tick(decoding, now)
+            else:
+                self._decode_tick(decoding, now)
 
         self.steps += 1
         return {"admitted": len(admitted), "prefilling": len(self.sched.prefilling()),
@@ -209,6 +205,13 @@ class Engine:
         return self.cache.cache_bytes()
 
     # ------------------------------------------------------------- internals
+
+    def _sample(self, req: Request, logits_row, token_idx: int) -> int:
+        """One token draw for ``req`` (greedy argmax unless the request set
+        SamplingParams) — the single sampling call site for prefill, decode,
+        drafting, and verification, keyed by generated-token index."""
+        sp = req.sampling if req.sampling is not None else SamplingParams()
+        return get_sampler(sp)(logits_row, token_idx)
 
     def _run_prefill_call(self, req: Request, tokens_np: np.ndarray):
         start = jnp.int32(req.prefill_pos)
@@ -237,9 +240,10 @@ class Engine:
                 logits = self._run_prefill_call(
                     req, req.prompt[req.prefill_pos:req.prefill_pos + 1])
         if req.prefill_pos == req.prompt_len:
-            tok = int(jnp.argmax(logits[0]))
+            logits_np = np.asarray(logits[0], np.float32)
+            tok = self._sample(req, logits_np, 0)
             if self.config.keep_logits:
-                req.logits_trace.append(np.asarray(logits[0], np.float32))
+                req.logits_trace.append(logits_np)
             req.tokens.append(tok)
             req.first_token_time = now
             req.state = RequestState.DECODE
@@ -264,11 +268,71 @@ class Engine:
                 *args, self.cache.caches, jnp.asarray(mask))
         logits_np = np.asarray(logits, np.float32)
         for req in decoding:
-            tok = int(np.argmax(logits_np[req.slot]))
+            tok = self._sample(req, logits_np[req.slot], len(req.tokens))
             if self.config.keep_logits:
                 req.logits_trace.append(logits_np[req.slot])
             req.tokens.append(tok)
+            req.decode_calls += 1
             self._maybe_finish(req, now)
+
+    def _spec_tick(self, decoding: list[Request], now: float) -> None:
+        """Draft → one batched verify → accept/rollback.
+
+        Per slot with last accepted token t at position p0 and drafts
+        d1..dk: the verify call feeds [t, d1..dk] at positions p0..p0+k
+        (writing all k+1 tokens' KV before attending — the usual
+        write-before-read causal invariant) and returns k+1 logit rows;
+        row i is the target's distribution after consuming token i.  The
+        host accepts the longest draft prefix the target's own draws
+        reproduce, emits the correction/bonus draw, then truncates the
+        slot back to its logical length so rejected-suffix pages free up.
+        """
+        cfg, k = self.config, self.spec.k
+        B = cfg.n_slots
+        eos = cfg.eos_id
+
+        for req in decoding:  # map headroom for the burst before any writes
+            p0 = req.prompt_len + len(req.tokens) - 1
+            self.cache.ensure(req.slot, p0 + k + 1)
+
+        drafts = self.proposer.propose(decoding)  # [n_slots, k] int32
+
+        tokens = np.zeros((B, k + 1), np.int32)
+        start = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
+        for req in decoding:
+            tokens[req.slot, 0] = req.tokens[-1]
+            tokens[req.slot, 1:] = drafts[req.slot]
+            start[req.slot] = req.prompt_len + len(req.tokens) - 1
+            mask[req.slot] = True
+        logits, self.cache.pool = self._verify_all(
+            self.params, jnp.asarray(tokens), jnp.asarray(start),
+            self.cache.pool, jnp.asarray(self.cache.tables), jnp.asarray(mask))
+        logits_np = np.asarray(logits, np.float32)  # [B, k+1, V]
+
+        for req in decoding:
+            base = len(req.tokens)
+            target = [self._sample(req, logits_np[req.slot, i], base + i)
+                      for i in range(k + 1)]
+            n_acc, emitted = accept_tokens(drafts[req.slot].tolist(), target)
+            req.decode_calls += 1
+            req.draft_proposed += k
+            req.draft_accepted += n_acc
+            for i, tok in enumerate(emitted):
+                if self.config.keep_logits:
+                    req.logits_trace.append(logits_np[req.slot, i])
+                req.tokens.append(tok)
+                if ((eos is not None and tok == eos)
+                        or len(req.tokens) >= req.max_new):
+                    break  # emission stops at EOS / budget even mid-burst
+            self._maybe_finish(req, now)
+            if not req.done:
+                # rollback: drop the rejected suffix's pages; valid KV covers
+                # t and the accepted drafts, the freshly emitted token is fed
+                # (and written) by the next tick
+                logical = req.prompt_len + len(req.tokens) - 1
+                self.cache.truncate(req.slot, logical)
+                self.proposer.on_accept(req)
 
     def _maybe_finish(self, req: Request, now: float) -> None:
         eos = self.config.eos_id
@@ -281,4 +345,6 @@ class Engine:
             self.sched.retire(req, reason, now)
             if self.paged:
                 self.cache.free(req.slot)
+            if self.proposer is not None:
+                self.proposer.on_retire(req)
             self.completed.append(req)

@@ -191,6 +191,50 @@ class PagedCache:
         self._free.sort(reverse=True)
         self.tables[slot] = 0
 
+    def mapped_pages(self, slot: int) -> int:
+        """Pages currently mapped onto ``slot`` (alloc/ensure fill from index
+        0 and truncate frees from the tail, so nonzero entries are a prefix)."""
+        return int(np.count_nonzero(self.tables[slot]))
+
+    def ensure(self, slot: int, n_tokens: int) -> int:
+        """Extend ``slot``'s mapping to cover ``n_tokens`` positions (no-op if
+        already covered).  Used by the speculative verifier to map headroom
+        for a drafted suffix before it is scored; returns pages added."""
+        need = self.pages_needed(n_tokens)
+        if need > self.pages_per_slot:
+            raise ValueError(
+                f"{n_tokens} tokens need {need} pages > pages_per_slot={self.pages_per_slot}")
+        have = self.mapped_pages(slot)
+        if need <= have:
+            return 0
+        if need - have > len(self._free):
+            raise RuntimeError(
+                f"out of pages: need {need - have} more, free {len(self._free)}")
+        for i in range(have, need):
+            self.tables[slot, i] = self._free.pop()
+        return need - have
+
+    def truncate(self, slot: int, n_tokens: int) -> int:
+        """Speculative-decoding rollback: shrink ``slot``'s logical length to
+        ``n_tokens`` and unmap the now-unreferenced *trailing* pages (pages
+        wholly past ``ceil(n_tokens / page_size)``).  Page contents are left
+        as-is — causal masking makes positions ≥ the logical length
+        unreachable, and a future ``ensure`` re-maps (possibly different)
+        pages that are rewritten before they are read, exactly like any
+        recycled page.  Keeps the free list sorted descending (same contract
+        as :meth:`free`); returns the number of pages released."""
+        keep = self.pages_needed(n_tokens)
+        released = 0
+        for i in range(keep, self.pages_per_slot):
+            pid = int(self.tables[slot, i])
+            if pid != 0:
+                self._free.append(pid)
+                self.tables[slot, i] = 0
+                released += 1
+        if released:
+            self._free.sort(reverse=True)
+        return released
+
     # -- accounting ---------------------------------------------------------
 
     def cache_bytes(self) -> int:

@@ -1,0 +1,122 @@
+"""Per-request sampling: temperature / top-k / top-p with a seeded PRNG.
+
+One sampling implementation is shared by every decode path — the reference
+``train.serve.greedy_generate`` loop, the engine's batched decode tick, and
+the speculative verifier's accept/reject pass — so that, given bitwise-equal
+logits, all of them draw the *same* token for the same (seed, row,
+token_index) triple.  That determinism is what lets speculative decoding
+stay token-exact against the non-speculative engine even at temperature > 0:
+the verifier re-samples each drafted position with the position's own key
+and accepts iff the draw matches the draft.
+
+Key discipline: ``row_key(seed, row, t) = fold_in(fold_in(PRNGKey(seed),
+row), t)`` where ``row`` is the batch row within a generate call (a single
+engine request is always row 0) and ``t`` indexes generated tokens from 0
+(the prefill-produced token).  No global stream — any path can sample token
+``t`` without replaying tokens ``< t``.
+
+``temperature == 0`` is greedy argmax and is the default everywhere; the
+greedy paths never touch the PRNG, preserving the engine's existing
+token-exact parity contracts bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode sampling.  Frozen + hashable → usable as a cache
+    key for compiled samplers."""
+
+    temperature: float = 0.0  # 0 → greedy argmax (default)
+    top_k: int = 0  # 0 → disabled
+    top_p: float = 1.0  # 1 → disabled
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def filter_logits(logits: jnp.ndarray, sp: SamplingParams) -> jnp.ndarray:
+    """[..., V] logits → temperature-scaled logits with non-top-k / non-
+    nucleus entries pushed to -inf.  Pure jnp, differentiability irrelevant."""
+    l = logits.astype(jnp.float32) / sp.temperature
+    V = l.shape[-1]
+    if sp.top_k and sp.top_k < V:
+        kth = jax.lax.top_k(l, sp.top_k)[0][..., -1:]
+        l = jnp.where(l >= kth, l, NEG_INF)
+    if sp.top_p < 1.0:
+        srt = jnp.flip(jnp.sort(l, axis=-1), axis=-1)
+        probs = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # exclusive cumsum below top_p: the argmax token always survives
+        keep = cum - probs < sp.top_p
+        cutoff = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+        l = jnp.where(l >= cutoff, l, NEG_INF)
+    return l
+
+
+def row_key(seed: int, row, token_idx) -> jnp.ndarray:
+    """Stateless per-token key: (request seed, batch row, generated-token
+    index) → PRNG key.  ``token_idx`` counts generated tokens from 0."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), row), token_idx)
+
+
+def sample_row(logits: jnp.ndarray, sp: SamplingParams, row, token_idx) -> jnp.ndarray:
+    """One row's token draw ([V] logits → scalar int32).  Traceable; the
+    greedy branch resolves at trace time and never builds a key."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = row_key(sp.seed, row, token_idx)
+    return jax.random.categorical(key, filter_logits(logits, sp)).astype(jnp.int32)
+
+
+class Sampler:
+    """Host-facing compiled sampler for one ``SamplingParams``.
+
+    ``sampler(logits, token_idx)`` → python int.  Greedy short-circuits to
+    ``np.argmax`` on the host (identical tie-breaking to ``jnp.argmax``:
+    first maximum wins) so the default path costs no device dispatch.
+    """
+
+    def __init__(self, sp: SamplingParams):
+        self.sp = sp
+        if not sp.greedy:
+            self._fn = jax.jit(
+                lambda logits, t: sample_row(logits, sp, jnp.int32(0), t))
+
+    def __call__(self, logits, token_idx: int) -> int:
+        if self.sp.greedy:
+            return int(np.argmax(np.asarray(logits)))
+        return int(self._fn(jnp.asarray(logits), jnp.int32(token_idx)))
+
+
+_SAMPLERS: dict[SamplingParams, Sampler] = {}
+
+
+def get_sampler(sp: SamplingParams) -> Sampler:
+    """Process-wide sampler cache — one compile per distinct SamplingParams."""
+    if sp not in _SAMPLERS:
+        _SAMPLERS[sp] = Sampler(sp)
+    return _SAMPLERS[sp]

@@ -1,0 +1,30 @@
+"""Speculative decoding over the paged MXFP4 KV cache.
+
+Draft → batched verify → accept/rollback; see ``serve/README.md`` for the
+proposer matrix and the acceptance / rollback semantics.
+"""
+
+from repro.serve.spec.config import SpecConfig
+from repro.serve.spec.proposers import (
+    PROPOSERS,
+    DraftModelProposer,
+    NGramProposer,
+    Proposer,
+    SelfProposer,
+    build_proposer,
+    register_proposer,
+)
+from repro.serve.spec.verify import accept_tokens, aggregate_stats
+
+__all__ = [
+    "SpecConfig",
+    "Proposer",
+    "SelfProposer",
+    "NGramProposer",
+    "DraftModelProposer",
+    "PROPOSERS",
+    "register_proposer",
+    "build_proposer",
+    "accept_tokens",
+    "aggregate_stats",
+]

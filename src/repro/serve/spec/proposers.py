@@ -1,0 +1,249 @@
+"""Pluggable draft proposers for speculative decoding.
+
+A proposer's job each spec tick: given the batch of DECODE-state requests,
+return ``k`` drafted continuation tokens per slot.  The engine then scores
+all drafts (plus the last accepted token) in ONE jitted verify call and
+accepts the longest prefix the target model agrees with.
+
+Three built-ins behind a string registry (``SpecConfig.proposer``):
+
+* ``"self"``  — the target model drafts for itself via k sequential batched
+  decode steps over the engine's own paged cache.  Costs the same FLOPs as
+  plain decoding (plus the verify), so it is NOT a speedup — it is the
+  **oracle**: greedy acceptance must be ≈100 % and engine outputs must stay
+  token-exact vs the non-speculative engine, which pins the whole verify /
+  rollback / accounting machinery.
+* ``"ngram"`` — suffix match over the request's own prompt + generation
+  (self-prompt speculation): find the most recent earlier occurrence of the
+  trailing ``ngram`` tokens and propose what followed it.  Zero extra
+  weights, zero device work; pays off on repetitive text.
+* ``"draft"`` — a separate (small) registry model running in FP4 with its
+  own :class:`~repro.serve.paged_cache.PagedCache`; drafts via k sequential
+  decode steps on the draft cache.  The draft cache mirrors the target's
+  slot lifecycle: admit → alloc, accept → truncate-rollback, retire → free,
+  and lazily prefills a slot's context on its first spec tick.
+
+Custom proposers: subclass :class:`Proposer` and decorate with
+``@register_proposer("name")``.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.serve.spec.config import SpecConfig
+
+PROPOSERS: dict[str, type] = {}
+
+
+def register_proposer(name: str):
+    def deco(cls):
+        PROPOSERS[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def build_proposer(engine, spec: SpecConfig) -> "Proposer":
+    if spec.proposer not in PROPOSERS:
+        raise ValueError(f"unknown proposer {spec.proposer!r}; "
+                         f"registered: {sorted(PROPOSERS)}")
+    return PROPOSERS[spec.proposer](engine, spec)
+
+
+class Proposer:
+    """Base class: slot-lifecycle hooks + the propose call.
+
+    ``propose`` returns an int32 ``[n_slots, k]`` array; only rows of
+    decoding slots are read.  Hooks are invoked by the engine: ``on_admit``
+    when a request takes a slot, ``on_accept`` after each verify tick's
+    acceptance/rollback (request still running), ``on_retire`` when the slot
+    is released.
+    """
+
+    def __init__(self, engine, spec: SpecConfig):
+        self.engine, self.spec = engine, spec
+
+    def on_admit(self, req) -> None:
+        pass
+
+    def on_accept(self, req) -> None:
+        pass
+
+    def on_retire(self, req) -> None:
+        pass
+
+    def propose(self, decoding: list) -> np.ndarray:
+        raise NotImplementedError
+
+
+def _draft_loop(engine, decoding, k, *, steps, pool_owner, params, tables):
+    """k sequential batched decode steps → drafts [n_slots, k].
+
+    Shared by the self- and draft-model proposers; ``pool_owner`` is the
+    cache whose ``.pool`` is threaded through (the engine's own cache for
+    self-speculation, the draft cache otherwise).  Draft draws reuse each
+    request's sampler at the *same* token indices the verifier will re-draw,
+    so a draft from bitwise-identical logits is always accepted.
+    """
+    B = engine.config.n_slots
+    drafts = np.zeros((B, k), np.int32)
+    cur = np.zeros((B, 1), np.int32)
+    pos = np.zeros((B,), np.int32)
+    mask = np.zeros((B,), bool)
+    for r in decoding:
+        cur[r.slot, 0] = r.tokens[-1]
+        pos[r.slot] = r.prompt_len + len(r.tokens) - 1
+        mask[r.slot] = True
+    import jax.numpy as jnp
+    tables_j, mask_j = jnp.asarray(tables), jnp.asarray(mask)
+    for j in range(k):
+        logits, pool_owner.pool = steps.decode_all(
+            params, jnp.asarray(cur), jnp.asarray(pos + j),
+            pool_owner.pool, tables_j, mask_j)
+        logits_np = np.asarray(logits, np.float32)
+        for r in decoding:
+            tok = engine._sample(r, logits_np[r.slot], len(r.tokens) + j)
+            drafts[r.slot, j] = tok
+            cur[r.slot, 0] = tok
+    return drafts
+
+
+@register_proposer("self")
+class SelfProposer(Proposer):
+    """Target-model self-drafting: the parity / acceptance oracle.
+
+    Drafting writes KV at positions ``p0 .. p0+k-1`` of the engine's own
+    cache; the verify step rewrites the same positions with the same values
+    before attending, so the pool state after the tick is exactly the
+    verify's — identical to what non-speculative decoding would have
+    written."""
+
+    def propose(self, decoding):
+        eng = self.engine
+        return _draft_loop(eng, decoding, self.spec.k, steps=eng._steps,
+                           pool_owner=eng.cache, params=eng.params,
+                           tables=eng.cache.tables)
+
+
+@register_proposer("ngram")
+class NGramProposer(Proposer):
+    """Self-prompt speculation: no weights, no device work.
+
+    Proposes the continuation of the most recent earlier occurrence of the
+    trailing n-gram in the request's own (prompt + generated) history;
+    falls back to repeating the last token when no match exists."""
+
+    def propose(self, decoding):
+        k = self.spec.k
+        drafts = np.zeros((self.engine.config.n_slots, k), np.int32)
+        for r in decoding:
+            ctx = np.concatenate([r.prompt, np.asarray(r.tokens, np.int32)])
+            drafts[r.slot] = self._match(ctx, self.spec.ngram, k)
+        return drafts
+
+    @staticmethod
+    def _match(ctx: np.ndarray, n: int, k: int) -> np.ndarray:
+        out = np.full((k,), ctx[-1], np.int32)
+        T = len(ctx)
+        n = min(n, T - 1)
+        if n < 1:
+            return out
+        suffix = ctx[T - n:]
+        for s in range(T - n - 1, -1, -1):  # most recent match wins
+            if np.array_equal(ctx[s:s + n], suffix):
+                cont = ctx[s + n:s + n + k]
+                out[:len(cont)] = cont
+                break
+        return out
+
+
+@register_proposer("draft")
+class DraftModelProposer(Proposer):
+    """A small registry model in FP4 drafts; it owns a full paged cache.
+
+    ``synced[slot]`` tracks how many context positions have valid KV in the
+    draft cache.  A slot's context is prefilled lazily on its first spec
+    tick (chunked, same [1, C] / [1, 1] shapes as the engine); after each
+    verify tick ``on_accept`` rolls the draft cache back in lock-step with
+    the target (``truncate`` + synced shrink), so rejected draft KV never
+    leaks into later proposals' visible range.
+    """
+
+    def __init__(self, engine, spec):
+        super().__init__(engine, spec)
+        if spec.draft_arch is None:
+            raise ValueError("SpecConfig.draft_arch is required for the "
+                             "'draft' proposer")
+        from repro.configs import get_config, get_reduced_config
+        from repro.models import build_model
+        from repro.serve.paged_cache import PagedCache
+        from repro.serve.steps import build_paged_steps
+
+        dcfg = (get_reduced_config(spec.draft_arch) if spec.draft_reduced
+                else get_config(spec.draft_arch))
+        if dcfg.family not in ("dense", "moe"):
+            raise ValueError(f"draft model must be a paged family, got {dcfg.family!r}")
+        self.model = build_model(dcfg)
+        self.params = self.model.init(jax.random.PRNGKey(spec.draft_seed))
+        ecfg = engine.config
+        self.cache = PagedCache(
+            self.model, n_slots=ecfg.n_slots,
+            pages_per_slot=-(-(ecfg.max_len + spec.k) // ecfg.page_size),
+            page_size=ecfg.page_size, kv_dtype=spec.draft_kv_dtype)
+        self._steps = build_paged_steps(
+            self.model, method=spec.draft_method, page_size=ecfg.page_size,
+            n_layers=self.cache.layers,
+            decode_backend="paged" if self.model.cfg.attn_backend == "paged" else "gather")
+        self.synced = np.zeros((ecfg.n_slots,), np.int64)
+
+    # -- slot lifecycle (mirrors the target cache) --------------------------
+
+    def on_admit(self, req):
+        self.cache.alloc(req.slot, req.prompt_len + req.max_new)
+        self.synced[req.slot] = 0
+
+    def on_accept(self, req):
+        logical = req.prompt_len + len(req.tokens) - 1
+        self.synced[req.slot] = min(int(self.synced[req.slot]), logical)
+        self.cache.truncate(req.slot, int(self.synced[req.slot]))
+
+    def on_retire(self, req):
+        self.cache.free(req.slot)
+        self.synced[req.slot] = 0
+
+    # -- drafting -----------------------------------------------------------
+
+    def _sync(self, req) -> None:
+        """Catch the draft cache up to the request's context minus its last
+        token (which the draft loop feeds itself)."""
+        import jax.numpy as jnp
+
+        p0 = req.prompt_len + len(req.tokens) - 1
+        have = int(self.synced[req.slot])
+        if have >= p0:
+            return
+        self.cache.ensure(req.slot, p0)
+        ctx = np.concatenate([req.prompt, np.asarray(req.tokens, np.int32)])
+        C = self.engine.config.prefill_chunk
+        table_row = jnp.asarray(self.cache.tables[req.slot])
+        while have < p0:
+            step = C if p0 - have >= C else 1
+            toks = jnp.asarray(ctx[have:have + step][None, :], jnp.int32)
+            _, self.cache.pool = self._steps.prefill_chunk(
+                self.params, toks, jnp.int32(have), table_row, self.cache.pool)
+            have += step
+        self.synced[req.slot] = have
+
+    def propose(self, decoding):
+        k = self.spec.k
+        for r in decoding:
+            self._sync(r)
+            self.cache.ensure(r.slot, r.prompt_len + len(r.tokens) - 1 + k)
+        drafts = _draft_loop(self.engine, decoding, k, steps=self._steps,
+                             pool_owner=self.cache, params=self.params,
+                             tables=self.cache.tables)
+        for r in decoding:  # the draft loop fed k tokens from p0 onward
+            self.synced[r.slot] = r.prompt_len + len(r.tokens) - 1 + k
+        return drafts

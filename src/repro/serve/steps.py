@@ -1,0 +1,133 @@
+"""Jitted device-step builders for paged-KV serving.
+
+Extracted from ``Engine`` so the speculative draft-model proposer can run the
+*same* decode / chunk-prefill / multi-token-verify machinery over its own
+:class:`~repro.serve.paged_cache.PagedCache` without duplicating the masking
+and scatter plumbing.  Each builder closes over a model and returns pure
+functions of ``(params, …, pool, tables, mask)`` — device state in, device
+state out; the caller owns the pool.
+
+Three step kinds per paged model:
+
+* ``decode_all``    — one token for every slot in one call (S == 1),
+* ``prefill_chunk`` — one slot's ``[1, C]`` prompt chunk (gather path),
+* ``verify_all``    — S = k+1 tokens for every slot in one call: the
+  speculative verify.  With ``decode_backend="paged"`` the drafted suffix is
+  scored *directly over the packed MXFP4 pool* (multi-query paged-attention
+  kernel, per-row causal bounds); ``"gather"`` materializes the dense view
+  and survives as the parity oracle.
+
+Masked lanes follow the engine invariants: positions are clamped to 0 and
+table rows zeroed, so writes land on the reserved scratch page and the
+lane's logits are garbage that the host never reads.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.serve import paged_cache as P
+from repro.train.serve import (
+    make_chunk_prefill_step,
+    make_decode_step,
+    make_verify_step,
+)
+
+
+class PagedSteps(NamedTuple):
+    decode_all: Callable  # (params, tokens [B,1], positions [B], pool, tables, mask) -> (logits [B,V], pool)
+    prefill_chunk: Callable  # (params, tokens [1,C], start, table_row, pool, extra) -> (logits [1,V], pool)
+    verify_all: Callable  # (params, tokens [B,S], start [B], pool, tables, mask) -> (logits [B,S,V], pool)
+
+
+def build_paged_steps(model: Model, *, method: str, page_size: int,
+                      n_layers: int, decode_backend: str = "paged") -> PagedSteps:
+    if decode_backend not in ("paged", "gather"):
+        raise ValueError(f"decode_backend must be 'paged' or 'gather', "
+                         f"got {decode_backend!r}")
+    decode = make_decode_step(model, method=method)
+    chunk = make_chunk_prefill_step(model, method=method)
+    verify = make_verify_step(model, method=method)
+    dtype = jnp.dtype(model.cfg.dtype)
+    ps = page_size
+
+    def _broadcast_tables(tables, mask):
+        tbl = jnp.where(mask[:, None], tables, 0)
+        return jnp.broadcast_to(tbl[None], (n_layers, *tbl.shape))
+
+    if decode_backend == "paged":
+
+        def decode_all(params, tokens, positions, pool, tables, mask):
+            """One decode step for every slot, attending directly over the
+            packed pool (no dense gather).  Masked lanes get an all-zero
+            table row, so their quantize-on-write lands on the scratch page
+            and their (meaningless) logits are discarded."""
+            pos_safe = jnp.where(mask, positions, 0)
+            paged = P.PagedKV(pool=pool, tables=_broadcast_tables(tables, mask))
+            logits, new_caches, _ = decode(params, tokens, pos_safe, paged)
+            return logits, new_caches.pool
+
+        def verify_all(params, tokens, start, pool, tables, mask):
+            """Score S = k+1 tokens per slot (last accepted + drafted suffix)
+            in one call, directly over the packed pool: the multi-query paged
+            kernel applies per-row causal bounds, so draft i only sees
+            positions ≤ start + i."""
+            pos_safe = jnp.where(mask, start, 0)
+            paged = P.PagedKV(pool=pool, tables=_broadcast_tables(tables, mask))
+            logits, new_caches = verify(params, tokens, pos_safe, paged)
+            return logits, new_caches.pool
+    else:
+
+        def decode_all(params, tokens, positions, pool, tables, mask):
+            """Gather-dequantize parity oracle: materializes the dense
+            [L, B, T, Hkv, hd] KV view each step."""
+            pos_safe = jnp.where(mask, positions, 0)
+            kv = P.gather_pages(pool, tables, dtype)
+            logits, (k2, v2), _ = decode(params, tokens, pos_safe, kv)
+            bidx = jnp.arange(tokens.shape[0])
+            k_new = k2[:, bidx, pos_safe]  # [L, B, Hkv, hd]
+            v_new = v2[:, bidx, pos_safe]
+            page_ids = tables[bidx, pos_safe // ps]
+            page_ids = jnp.where(mask, page_ids, 0)
+            pool = P.scatter_tokens(pool, page_ids, pos_safe % ps, k_new, v_new)
+            return logits, pool
+
+        def verify_all(params, tokens, start, pool, tables, mask):
+            """Gather-path verify oracle: dense view in, S written tokens
+            scattered back per slot."""
+            B, S = tokens.shape
+            pos_safe = jnp.where(mask, start, 0)
+            kv = P.gather_pages(pool, tables, dtype)
+            logits, (k2, v2) = verify(params, tokens, pos_safe, kv)
+            bidx = jnp.arange(B)
+            positions = pos_safe[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+            k_new = k2[:, bidx[:, None], positions]  # [L, B, S, Hkv, hd]
+            v_new = v2[:, bidx[:, None], positions]
+            page_ids = tables[bidx[:, None], positions // ps]
+            page_ids = jnp.where(mask[:, None], page_ids, 0)
+            L_ = k_new.shape[0]
+            pool = P.scatter_tokens(
+                pool, page_ids.reshape(-1), (positions % ps).reshape(-1),
+                k_new.reshape(L_, B * S, *k_new.shape[3:]),
+                v_new.reshape(L_, B * S, *v_new.shape[3:]))
+            return logits, pool
+
+    def prefill_chunk(params, tokens, start, table_row, pool, extra=None):
+        """tokens [1, C] at absolute positions start..start+C for the slot
+        mapped by ``table_row`` → (last-token logits, pool)."""
+        kv = P.gather_pages(pool, table_row[None], dtype)
+        logits, (k2, v2), _ = chunk(
+            params, tokens, jnp.full((1,), start, jnp.int32), kv, extra)
+        C = tokens.shape[1]
+        k_c = jax.lax.dynamic_slice_in_dim(k2, start, C, axis=2)[:, 0]
+        v_c = jax.lax.dynamic_slice_in_dim(v2, start, C, axis=2)[:, 0]
+        pos = start + jnp.arange(C)
+        pool = P.scatter_tokens(pool, table_row[pos // ps], pos % ps, k_c, v_c)
+        return logits, pool
+
+    return PagedSteps(jax.jit(decode_all), jax.jit(prefill_chunk),
+                      jax.jit(verify_all))

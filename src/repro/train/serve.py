@@ -64,6 +64,39 @@ def make_prefill_step(model: Model, *, method: str = "quartet") -> Callable:
     return prefill
 
 
+def make_verify_step(model: Model, *, method: str = "quartet") -> Callable:
+    """Speculative-decoding verify: score ``tokens [B, S]`` (per slot: the
+    last accepted token followed by S-1 drafted tokens) at absolute positions
+    ``start .. start+S`` in one call, returning the logits of **every**
+    position — ``logits[:, i]`` is the target distribution for the token
+    after ``tokens[:, i]``, which the verifier compares against draft i+1
+    (and ``logits[:, -1]`` yields the bonus token).  Same contract as
+    :func:`make_chunk_prefill_step` except the full ``[B, S, V]`` logits are
+    kept instead of only the last column; with a ``PagedKV`` cache the paged
+    backend scores all S tokens directly over the packed pool."""
+    import dataclasses
+
+    from repro.models.registry import build_model
+
+    # verify rows sit at per-slot offsets: causal masks and rope angles must
+    # be computed per row, so this step runs on a model built with
+    # attn_rows_shared=False (train/prefill keep the row-shared fast path)
+    vmodel = build_model(dataclasses.replace(model.cfg, attn_rows_shared=False))
+    compute_dtype = jnp.dtype(vmodel.cfg.dtype)
+
+    def verify(params, tokens, start, caches, extra=None):
+        """tokens [B, S], start [B] → (logits [B, S, V] f32, caches)."""
+        cparams = _cast_params(params, compute_dtype)
+        B, S = tokens.shape
+        positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        logits, caches, _ = vmodel.forward(
+            cparams, tokens, jnp.uint32(0), positions=positions, caches=caches,
+            cache_index=start, extra=extra, method=method)
+        return logits, caches
+
+    return verify
+
+
 def make_decode_step(model: Model, *, method: str = "quartet") -> Callable:
     cfg = model.cfg
     compute_dtype = jnp.dtype(cfg.dtype)
@@ -81,25 +114,47 @@ def make_decode_step(model: Model, *, method: str = "quartet") -> Callable:
 
 
 def greedy_generate(model: Model, params, prompt: jnp.ndarray, max_new: int,
-                    max_len: int, extra=None, method: str = "quartet"):
-    """Reference generation loop (prefill → lax.scan of decode steps)."""
+                    max_len: int, extra=None, method: str = "quartet",
+                    sampling=None):
+    """Reference generation loop (prefill → lax.scan of decode steps).
+
+    ``sampling`` is an optional :class:`repro.serve.sampling.SamplingParams`;
+    ``None`` (or ``temperature == 0``) keeps the historical greedy-argmax
+    path bit-for-bit.  Sampled draws use the stateless per-token keys
+    ``sampling.row_key(seed, row, t)`` — the same discipline the serving
+    engine uses, so a single-row sampled generate is token-exact against an
+    engine request with the same SamplingParams."""
     if max_new < 1:
         raise ValueError(f"max_new must be >= 1, got {max_new}")
+    if sampling is not None and not sampling.greedy:
+        from repro.serve.sampling import sample_row
+
+        B = prompt.shape[0]
+
+        def pick(logits, t):  # [B, V] → [B, 1] int32, token index t
+            rows = jnp.arange(B, dtype=jnp.int32)
+            return jax.vmap(
+                lambda l, r: sample_row(l, sampling, r, t))(logits, rows)[:, None]
+    else:
+        def pick(logits, t):
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
     prefill = make_prefill_step(model, method=method)
     decode = make_decode_step(model, method=method)
     caches = init_cache(model, prompt.shape[0], max_len)
     logits, caches, pos = prefill(params, prompt, caches, extra=extra)
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    tok = pick(logits, jnp.int32(0))
     if max_new == 1:
         # the scan below would run 0 steps and return an empty [0, B] ys —
         # the prefill-produced token IS the whole answer
         return tok
 
-    def body(carry, _):
+    def body(carry, t):
         tok, pos, caches = carry
         logits, caches, pos = decode(params, tok, pos, caches, extra=extra)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        tok = pick(logits, t)
         return (tok, pos, caches), tok[:, 0]
 
-    (_, _, _), toks = jax.lax.scan(body, (tok, pos, caches), None, length=max_new - 1)
+    (_, _, _), toks = jax.lax.scan(
+        body, (tok, pos, caches), jnp.arange(1, max_new, dtype=jnp.int32))
     return jnp.concatenate([tok, jnp.moveaxis(toks, 0, 1)], axis=1)

@@ -118,6 +118,35 @@ def test_paged_kernel_parity_mxfp4(ps, hd):
 
 
 @pytest.mark.kernels
+@pytest.mark.parametrize("mode", ["dense", "mxfp4"])
+@pytest.mark.parametrize("S", [2, 4])
+def test_paged_kernel_multi_query_parity(mode, S):
+    """Speculative-verify shape: S consecutive queries per slot with per-row
+    causal bounds (row s at absolute position lengths[b]-1+s) must match the
+    blocked reference with per-row positions over the same ragged batch."""
+    ps, Hkv, group, hd = 4, 2, 2, 32
+    lengths = [6, 1, 9]  # first-query visible lengths (ragged, incl. fresh slot)
+    pages_per_slot = max(-(-(max(lengths) + S - 1) // ps), 2)
+    written = [l + S - 1 for l in lengths]  # burst KV is written before reading
+    pool, tables, k, v = _paged_setup(mode, written, ps, Hkv, hd,
+                                      pages_per_slot, seed=7)
+    B, Hq = len(lengths), Hkv * group
+    rng = np.random.default_rng(77)
+    q = jnp.asarray(rng.standard_normal((B, S, Hq, hd)).astype(np.float32))
+    ln = jnp.asarray(lengths, jnp.int32)
+    out = PA.paged_attention(q, pool, tables, ln)
+    pos = (ln[:, None] - 1) + jnp.arange(S)[None, :]
+    ref = blocked_attention(q, k, v, pos, causal=True, kv_chunk=ps,
+                            shared_mask=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+    # the S == 1 fast path is the same kernel
+    out1 = PA.paged_attention(q[:, 0], pool, tables, ln)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(ref[:, 0]),
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.kernels
 def test_paged_kernel_mxfp4_bounded_vs_fp():
     """End-to-end quantization error: paged attention over the packed pool
     vs blocked attention over the *original* (unquantized) KV."""

@@ -1,0 +1,331 @@
+"""Speculative decoding: verify/rollback invariants, proposers, sampling.
+
+Contracts pinned here:
+
+* **Token-exactness** — greedy speculation (any proposer) emits exactly the
+  tokens the non-speculative engine would, across dense/mxfp4 pools and
+  ragged concurrent slot lengths; self-speculation additionally accepts
+  ~100 % of drafts (same model, bitwise-equal logits), which pins the whole
+  draft → verify → accept pipeline including the multi-query paged kernel.
+* **Rollback** — rejected suffixes shrink the slot's logical length;
+  logical lengths grow monotonically tick over tick, freed speculation
+  pages return to the (sorted) free list and are reused low-ids-first.
+* **Sampling** — temperature 0 ≡ greedy bit-for-bit; a sampled engine
+  request matches a sampled ``greedy_generate`` with the same
+  SamplingParams (shared per-token key discipline); sampled speculation
+  matches sampled non-speculative decoding.
+* **Accounting** — acceptance rate ∈ [0, 1]; plain decode sits at exactly
+  1.0 token per decode call, speculation above 1.0.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.serve import Engine, EngineConfig, PagedCache, SamplingParams, SpecConfig
+from repro.serve.spec import accept_tokens, aggregate_stats
+from repro.train.serve import greedy_generate
+
+pytestmark = pytest.mark.spec
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def qwen_setup():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _prompts(cfg, lens=(7, 12, 5), seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32) for n in lens]
+
+
+def _run(model, params, prompts, max_new=6, *, spec=None, kv="dense",
+         backend=None, sampling=None, n_slots=3, eos_id=None):
+    eng = Engine(model, params, EngineConfig(
+        n_slots=n_slots, max_len=32, page_size=8, kv_dtype=kv,
+        prefill_chunk=8, decode_backend=backend, spec=spec, eos_id=eos_id))
+    handles = [eng.submit(p, max_new, sampling=sampling) for p in prompts]
+    eng.drain()
+    return eng, handles
+
+
+# ---------------------------------------------------------------------------
+# acceptance logic (pure host)
+# ---------------------------------------------------------------------------
+
+
+def test_accept_tokens():
+    # all accepted → bonus rides along
+    assert accept_tokens([1, 2, 3], [1, 2, 3, 9]) == (3, [1, 2, 3, 9])
+    # first mismatch → correction token emitted, suffix dropped
+    assert accept_tokens([1, 2, 3], [1, 7, 8, 9]) == (1, [1, 7])
+    assert accept_tokens([1, 2, 3], [5, 6, 7, 8]) == (0, [5])
+    with pytest.raises(ValueError):
+        accept_tokens([1, 2], [1, 2])  # target must carry k+1 draws
+
+
+# ---------------------------------------------------------------------------
+# greedy token-exactness: spec engine == non-spec engine (== greedy_generate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv,backend", [("dense", "paged"), ("dense", "gather"),
+                                        ("mxfp4", "paged")])
+def test_self_spec_token_exact(qwen_setup, kv, backend):
+    """Greedy self-speculation (k=3): token-for-token vs the non-speculative
+    engine over ragged concurrent requests, and ~100 % acceptance (the
+    verify recomputes bitwise-identical logits).  mxfp4+gather is excluded
+    by design: the gather oracle's intra-burst attention reads the drafted
+    tokens' KV pre-quantization, while sequential decode reads them from the
+    packed pool — the default paged backend quantizes-then-attends in both
+    shapes and stays exact."""
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg)
+    _, base = _run(model, params, prompts, kv=kv, backend=backend)
+    eng, spec_h = _run(model, params, prompts, kv=kv, backend=backend,
+                       spec=SpecConfig(k=3, proposer="self"))
+    for b, s in zip(base, spec_h):
+        assert s.tokens == b.tokens
+        assert s.acceptance_rate() == 1.0
+        assert s.tokens_per_decode_call() > 1.0
+    # all pages recycled (incl. speculation headroom pages)
+    assert eng.cache.free_pages == eng.cache.n_pages - 1
+
+
+def test_ngram_spec_token_exact_and_bounded_acceptance(qwen_setup):
+    """Any greedy proposer is token-exact — speculation changes the schedule,
+    never the tokens; ngram acceptance is whatever it is, but ∈ [0, 1]."""
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg)
+    for kv in ("dense", "mxfp4"):
+        _, base = _run(model, params, prompts, kv=kv)
+        _, spec_h = _run(model, params, prompts, kv=kv,
+                         spec=SpecConfig(k=3, proposer="ngram", ngram=2))
+        for b, s in zip(base, spec_h):
+            assert s.tokens == b.tokens
+            assert 0.0 <= s.acceptance_rate() <= 1.0
+            assert 1.0 <= s.tokens_per_decode_call() <= 4.0
+
+
+def test_draft_model_spec_token_exact(qwen_setup):
+    """Draft-model proposer with draft == target (same arch/seed): the draft
+    cache machinery (lazy prefill sync, lock-step rollback) must keep
+    acceptance high and outputs exact."""
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(7, 12))
+    spec = SpecConfig(k=3, proposer="draft", draft_arch="qwen3-1.7b",
+                      draft_kv_dtype="mxfp4")
+    _, base = _run(model, params, prompts, kv="mxfp4")
+    _, spec_h = _run(model, params, prompts, kv="mxfp4", spec=spec)
+    for b, s in zip(base, spec_h):
+        assert s.tokens == b.tokens
+        assert s.acceptance_rate() > 0.5  # same weights → near-total agreement
+
+
+def test_moe_self_spec_token_exact():
+    """MoE routing sees multi-token verify bursts (per-token top-k routing
+    at per-slot offsets) — must stay exact like dense."""
+    cfg = get_reduced_config("qwen3-moe-235b-a22b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    prompts = _prompts(cfg, lens=(6, 9))
+    _, base = _run(model, params, prompts, max_new=4, kv="dense")
+    _, spec_h = _run(model, params, prompts, max_new=4, kv="dense",
+                     spec=SpecConfig(k=2, proposer="self"))
+    for b, s in zip(base, spec_h):
+        assert s.tokens == b.tokens
+
+
+def test_spec_eos_mid_burst(qwen_setup):
+    """EOS inside an accepted burst stops emission immediately — no tokens
+    after EOS, finish_reason == 'eos', parity with the non-spec engine."""
+    cfg, model, params = qwen_setup
+    prompt = _prompts(cfg, lens=(9,), seed=6)[0]
+    first = int(greedy_generate(model, params, jnp.asarray(prompt)[None],
+                                max_new=1, max_len=16)[0, 0])
+    second = int(greedy_generate(model, params, jnp.asarray(prompt)[None],
+                                 max_new=2, max_len=16)[0, 1])
+    for eos in (first, second):
+        _, base = _run(model, params, [prompt], max_new=8, eos_id=eos)
+        _, spec_h = _run(model, params, [prompt], max_new=8, eos_id=eos,
+                         spec=SpecConfig(k=3, proposer="self"))
+        assert spec_h[0].tokens == base[0].tokens
+        assert spec_h[0].finish_reason == "eos"
+        assert spec_h[0].tokens[-1] == eos
+
+
+def test_spec_rejects_non_paged_families():
+    cfg = get_reduced_config("falcon-mamba-7b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    with pytest.raises(ValueError):
+        Engine(model, params, EngineConfig(spec=SpecConfig(k=2)))
+
+
+# ---------------------------------------------------------------------------
+# rollback invariants: monotone logical lengths, page reuse
+# ---------------------------------------------------------------------------
+
+
+def test_spec_rollback_monotone_and_bounded(qwen_setup):
+    """Step the spec engine tick by tick: per-slot logical lengths never
+    decrease, mapped pages always cover the logical length, and acceptance
+    accounting stays within [0, proposed]."""
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(5, 11, 8))
+    eng = Engine(model, params, EngineConfig(
+        n_slots=3, max_len=32, page_size=8, kv_dtype="mxfp4", prefill_chunk=8,
+        spec=SpecConfig(k=3, proposer="ngram")))
+    handles = [eng.submit(p, 8) for p in prompts]
+    logical_seen: dict[int, int] = {}
+    while eng.sched.pending:
+        eng.step()
+        for req in eng.sched.decoding():
+            logical = req.prompt_len + len(req.tokens) - 1
+            assert logical >= logical_seen.get(req.rid, 0)  # monotone
+            logical_seen[req.rid] = logical
+            # pages mapped on the slot always cover the logical prefix
+            assert (eng.cache.mapped_pages(req.slot) * eng.cache.page_size
+                    >= logical)
+            assert 0 <= req.draft_accepted <= req.draft_proposed
+        # free list stays sorted descending through every truncate/ensure
+        assert eng.cache._free == sorted(eng.cache._free, reverse=True)
+    assert all(h.done for h in handles)
+    agg = aggregate_stats(handles)
+    assert 0.0 <= agg["acceptance_rate"] <= 1.0
+
+
+def test_truncate_frees_trailing_pages_and_reuse():
+    """PagedCache.truncate: frees only wholly-trailing pages, keeps the free
+    list sorted, and the released pages are handed out again low-ids-first
+    (page-reuse-after-rollback, extending the PR 3 ``free`` invariant)."""
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    cache = PagedCache(model, n_slots=2, pages_per_slot=4, page_size=4,
+                       kv_dtype="dense")
+    cache.alloc(0, 16)  # pages 1,2,3,4
+    assert cache.tables[0].tolist() == [1, 2, 3, 4]
+    # rollback to 9 tokens → pages covering 0..8 stay (3 pages), page 4 freed
+    assert cache.truncate(0, 9) == 1
+    assert cache.tables[0].tolist() == [1, 2, 3, 0]
+    assert cache.mapped_pages(0) == 3
+    assert cache._free == sorted(cache._free, reverse=True)
+    # another slot grabs the freed page (lowest id first)
+    cache.alloc(1, 4)
+    assert cache.tables[1].tolist() == [4, 0, 0, 0]
+    # re-extending slot 0 reuses the next lowest free id
+    added = cache.ensure(0, 16)
+    assert added == 1
+    assert cache.tables[0].tolist() == [1, 2, 3, 5]
+    # truncate to a page boundary frees nothing extra
+    assert cache.truncate(0, 12) == 1 and cache.truncate(0, 12) == 0
+    # ensure respects pages_per_slot
+    with pytest.raises(ValueError):
+        cache.ensure(0, 17)
+
+
+def test_ensure_noop_when_covered():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    cache = PagedCache(model, n_slots=1, pages_per_slot=3, page_size=4,
+                       kv_dtype="mxfp4")
+    cache.alloc(0, 5)  # 2 pages
+    free_before = cache.free_pages
+    assert cache.ensure(0, 8) == 0  # already covered
+    assert cache.free_pages == free_before
+    assert cache.ensure(0, 9) == 1
+
+
+# ---------------------------------------------------------------------------
+# sampling: params, determinism, parity
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_temperature_zero_is_greedy(qwen_setup):
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(7, 10))
+    _, base = _run(model, params, prompts)
+    _, t0 = _run(model, params, prompts, sampling=SamplingParams())
+    for b, s in zip(base, t0):
+        assert s.tokens == b.tokens
+
+
+def test_sampled_engine_matches_greedy_generate(qwen_setup):
+    """Engine host sampling and the jitted greedy_generate sampling share
+    per-token keys → identical streams for identical SamplingParams."""
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(7, 12))
+    sp = SamplingParams(temperature=0.8, top_k=20, top_p=0.9, seed=11)
+    _, hs = _run(model, params, prompts, sampling=sp)
+    for p, h in zip(prompts, hs):
+        ref = greedy_generate(model, params, jnp.asarray(p)[None], max_new=6,
+                              max_len=int(p.size) + 6, sampling=sp)
+        assert h.tokens == ref[0].tolist()
+    # same seed → reproducible; different seed → (almost surely) different
+    _, hs2 = _run(model, params, prompts, sampling=sp)
+    assert [h.tokens for h in hs] == [h.tokens for h in hs2]
+    _, hs3 = _run(model, params, prompts,
+                  sampling=dataclasses.replace(sp, seed=12))
+    assert [h.tokens for h in hs3] != [h.tokens for h in hs]
+
+
+def test_sampled_self_spec_matches_nonspec(qwen_setup):
+    """Rejection of sampled drafts: the verifier re-draws each position with
+    its own key; with self-drafting the logits are bitwise equal, so sampled
+    speculation reproduces the sampled non-speculative stream exactly."""
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(7, 12, 5))
+    sp = SamplingParams(temperature=0.9, top_k=50, seed=5)
+    _, base = _run(model, params, prompts, sampling=sp)
+    _, spec_h = _run(model, params, prompts, sampling=sp,
+                     spec=SpecConfig(k=3, proposer="self"))
+    for b, s in zip(base, spec_h):
+        assert s.tokens == b.tokens
+        assert s.acceptance_rate() == 1.0
+
+
+def test_top_k_one_is_argmax(qwen_setup):
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(9,))
+    _, base = _run(model, params, prompts)
+    _, hs = _run(model, params, prompts,
+                 sampling=SamplingParams(temperature=1.3, top_k=1, seed=3))
+    assert hs[0].tokens == base[0].tokens
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def test_plain_decode_accounting(qwen_setup):
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(7, 10))
+    _, hs = _run(model, params, prompts)
+    for h in hs:
+        assert h.tokens_per_decode_call() == 1.0
+        assert h.acceptance_rate() is None
+        assert h.decode_calls == len(h.tokens) - 1
+    agg = aggregate_stats(hs)
+    assert agg["tokens_per_decode_call"] == 1.0
+    assert agg["acceptance_rate"] is None
