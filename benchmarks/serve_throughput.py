@@ -13,11 +13,16 @@ JSON report:
 * a speculative on/off A/B (``spec`` section): greedy self-speculation over
   the paged-kernel decode, dense + mxfp4 pools, with token-exactness vs the
   non-speculative engine asserted,
+* a prefill A/B (``prefill`` section): a concurrent-arrival burst of
+  prefill-dominated requests (max_new=1) through the batched paged prefill
+  (ONE jitted call advances every prefilling slot per tick) vs the per-slot
+  gather oracle — prompt tokens/sec, mean + p95 TTFT, and per-chunk KV
+  bytes; batched paged prefill must stay token-exact vs the oracle,
 * persistent cache bytes dense vs FP4 and their ratio,
 * decode-step HBM traffic model: KV bytes touched per batched decode step by
   the fused paged-attention kernel (O(packed KV): read the packed pages in
   place) vs the legacy gather-dequantize oracle (read packed + write dense +
-  read dense), and their ratio,
+  read dense), and their ratio — and the same model per prefill chunk,
 * parity checks — dense-cache engine outputs must equal sequential
   ``greedy_generate`` token-for-token, and the paged-kernel decode must equal
   the gather-dense decode token-for-token in dense-cache mode.
@@ -89,6 +94,22 @@ def decode_kv_bytes_per_step(cache, backend: str) -> int:
     return packed + 2 * dense  # read packed + write dense + read dense
 
 
+def prefill_kv_bytes_per_chunk(cache, backend: str) -> int:
+    """KV bytes touched per prefilling slot per chunk (model, not measurement).
+
+    Prefill sweeps one slot's page table per chunk exactly as decode sweeps
+    every slot's per step, so this is the decode model divided by the slot
+    count (ONE shared byte model — keep any change to it in
+    :func:`decode_kv_bytes_per_step`): the batched paged prefill streams the
+    slot's packed pages once per chunk, the gather oracle reads the packed
+    pages, writes the dense [L, T, Hkv, hd] view, and attention reads it
+    back.  Batched prefill therefore moves O(packed KV) per chunk instead of
+    O(dense KV), which is what keeps TTFT flat as concurrent arrivals stack
+    up.
+    """
+    return decode_kv_bytes_per_step(cache, backend) // cache.n_slots
+
+
 def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
           max_new: int = 8, n_slots: int = 4, verify_parity: bool = True,
           spec_k: int = 3, spec_proposer: str = "self") -> dict:
@@ -131,6 +152,8 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
             if eng.paged else 16.0,
             "decode_kv_bytes_per_step":
             decode_kv_bytes_per_step(eng.cache, backend) if eng.paged else 0,
+            "prefill_kv_bytes_per_chunk":
+            prefill_kv_bytes_per_chunk(eng.cache, backend) if eng.paged else 0,
         }
         return stats, {r.rid: list(r.tokens) for r in done}
 
@@ -143,7 +166,8 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
             report[kv] = stats
         report["decode_backends"][f"{kv}/{backend}"] = {
             k: stats[k] for k in
-            ("tokens_per_sec", "wall_sec", "decode_kv_bytes_per_step")}
+            ("tokens_per_sec", "wall_sec", "decode_kv_bytes_per_step",
+             "prefill_kv_bytes_per_chunk")}
 
     # -- speculative on/off A/B (paged-kernel decode, both pool dtypes) -----
     report["spec"] = {"k": spec_k, "proposer": spec_proposer}
@@ -153,6 +177,51 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
             stats, out = run_config(kv, "paged", spec=sc)
             stats["parity_vs_nonspec"] = out == outputs[(kv, "paged")]
             report["spec"][kv] = stats
+
+    # -- batched-prefill A/B: concurrent arrival burst, prefill-dominated ----
+    # Every request lands at t=0 with max_new=1, so the run is ~all prefill:
+    # the batched path advances EVERY prefilling slot in one jitted call per
+    # tick (and attends over the packed pool), the gather oracle runs one
+    # [1, C] call per slot per tick plus [1, 1] remainder singles.
+    if cfg.family in ("dense", "moe"):
+        prng = np.random.default_rng(1)
+        plens = [int(prng.integers(9, 33)) for _ in range(n_requests)]
+        burst = [(0.0, prng.integers(0, cfg.vocab_size, pl).astype(np.int32), 1)
+                 for pl in plens]
+        prefill_rep: dict = {"n_requests": n_requests,
+                             "prompt_tokens": sum(plens)}
+        pf_out = {}
+        for backend in ("paged", "gather"):
+            eng = Engine(model, params, EngineConfig(
+                n_slots=n_slots, max_len=64, page_size=16, kv_dtype="dense",
+                prefill_chunk=16, decode_backend=backend))
+            eng.submit(burst[0][1], 1, arrival_time=0.0)
+            eng.drain()
+            eng.completed.clear()
+            t0 = time.perf_counter()
+            done, _ = run_workload(eng, burst, verbose=False)
+            wall = time.perf_counter() - t0
+            ttfts = [r.ttft() for r in done]
+            prefill_rep[backend] = {
+                "prefill_tok_per_s": round(sum(plens) / wall, 2),
+                "wall_sec": round(wall, 3),
+                "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4),
+                "ttft_p95_s": round(_pct(ttfts, 0.95), 4),
+            }
+            pf_out[backend] = {r.rid: list(r.tokens) for r in done}
+        # batched paged prefill must reproduce the per-slot gather oracle
+        # token-for-token on the dense pool
+        prefill_rep["parity_paged_vs_gather"] = pf_out["paged"] == pf_out["gather"]
+        db_ = report["decode_backends"]
+        pp = db_["mxfp4/paged"]["prefill_kv_bytes_per_chunk"]
+        prefill_rep["kv_bytes_per_chunk_mxfp4"] = {
+            "paged": pp,
+            "gather": db_["mxfp4/gather"]["prefill_kv_bytes_per_chunk"],
+            "ratio_gather_over_paged": round(
+                db_["mxfp4/gather"]["prefill_kv_bytes_per_chunk"] / pp, 2)
+            if pp else None,
+        }
+        report["prefill"] = prefill_rep
 
     report["cache_ratio"] = round(
         report["dense"]["cache_bytes"] / report["mxfp4"]["cache_bytes"], 2)
@@ -210,6 +279,17 @@ def run():
             ("serve_spec_acceptance", 0.0, f"{sp['acceptance_rate']}"),
             ("serve_spec_parity", 0.0, str(sp["parity_vs_nonspec"])),
         ]
+    if "prefill" in rep:
+        pf = rep["prefill"]
+        rows += [
+            ("serve_prefill_tok_per_s", 0.0,
+             f"{pf['paged']['prefill_tok_per_s']}tok/s"),
+            ("serve_prefill_ttft_mean", 0.0,
+             f"{pf['paged']['ttft_mean_s']}s"),
+            ("serve_prefill_bytes_ratio", 0.0,
+             f"{pf['kv_bytes_per_chunk_mxfp4']['ratio_gather_over_paged']}x"),
+            ("serve_prefill_parity", 0.0, str(pf["parity_paged_vs_gather"])),
+        ]
     return rows
 
 
@@ -242,6 +322,17 @@ def main():
             assert key in rep["decode_backends"], f"missing decode metrics {key}"
             assert rep["decode_backends"][key]["decode_kv_bytes_per_step"] > 0
         assert rep["decode_bytes_ratio_gather_over_paged"] > 1.0
+        # batched paged prefill: token-exact vs the per-slot gather oracle,
+        # O(packed KV) per chunk, and real throughput/TTFT numbers reported
+        # (section exists only for paged families, like the spec A/B)
+        pf = rep.get("prefill")
+        if pf is not None:
+            assert pf["parity_paged_vs_gather"], \
+                "PARITY FAILURE: batched paged prefill != per-slot gather prefill"
+            assert pf["kv_bytes_per_chunk_mxfp4"]["ratio_gather_over_paged"] > 1.0
+            for backend in ("paged", "gather"):
+                assert pf[backend]["prefill_tok_per_s"] > 0
+                assert pf[backend]["ttft_mean_s"] > 0
         # non-spec decode emits exactly one token per batched call
         assert rep["mxfp4"]["tokens_per_decode_call"] == 1.0
         # spec A/B only exists for paged (dense/moe) families
@@ -258,6 +349,8 @@ def main():
         raise SystemExit("PARITY FAILURE: dense-cache engine != sequential greedy")
     if not rep["parity_paged_vs_gather_dense"]:
         raise SystemExit("PARITY FAILURE: paged-kernel decode != gather-dense decode")
+    if rep.get("prefill", {}).get("parity_paged_vs_gather") is False:
+        raise SystemExit("PARITY FAILURE: batched paged prefill != gather prefill")
     if "dense" in rep["spec"] and not rep["spec"]["dense"]["parity_vs_nonspec"]:
         raise SystemExit("PARITY FAILURE: speculative engine != non-speculative engine")
     if rep["cache_ratio"] < 3.0:

@@ -80,10 +80,13 @@ class ModelConfig:
     attn_q_chunk: int = 1024  # flash-style blocking for long sequences
     attn_kv_chunk: int = 1024
     # True (default): S > 1 rows share row 0's positions for causal masks and
-    # rope angles — train/prefill rows are an identical arange, and per-row
-    # [B, S, …] masks/angles would hoist out of the layer scan as multi-GB
-    # loop invariants.  The speculative verify step builds its model with
-    # False: its rows sit at genuinely different per-slot offsets.
+    # rope angles — train/whole-batch-prefill rows are an identical arange,
+    # and per-row [B, S, …] masks/angles would hoist out of the layer scan as
+    # multi-GB loop invariants.  The serving engine's multi-row steps build
+    # their model with False: both the speculative verify and the batched
+    # paged prefill (train.serve.make_verify_step, which serve.steps reuses
+    # for prefill_all) put every slot's rows at genuinely different per-slot
+    # offsets, so masks and rope angles must be per row.
     attn_rows_shared: bool = True
     remat: bool = True
     # "full": recompute everything (paper-faithful baseline);

@@ -24,7 +24,13 @@ verify scores the last accepted token plus S-1 drafted tokens per slot in
 the same single pass — the query block grows to ``S·group`` rows and each
 row's causal bound is offset by its token index (row ``r`` sees positions
 ≤ ``lengths[b] - 1 + r // group``), so drafts never attend past themselves.
-Plain decode is the S == 1 special case of the same kernel.
+Plain decode is the S == 1 special case of the same kernel.  **Batched paged
+prefill** is the S == prefill_chunk case: every prefilling slot's chunk is
+scored in one grid pass over the packed pool, with ragged tails handled by
+:func:`prefill_chunk_layout` — padding tokens are positioned on a sentinel
+scratch column appended to the page table, so their quantize-on-write lands
+on page 0 and their (garbage) output rows carry per-row causal bounds past
+every valid row's, never contaminating real tokens.
 
 ``PagedKV`` is the pytree that threads this state through the model's
 layer scan: pool leaves carry a leading ``[L]`` axis and are consumed one
@@ -108,6 +114,47 @@ def scatter_token(pool: dict, page_ids: jnp.ndarray, offsets: jnp.ndarray,
         "v_codes": pool["v_codes"].at[page_ids, offsets].set(vq.codes),
         "v_scales": pool["v_scales"].at[page_ids, offsets].set(vq.scales),
     }
+
+
+def prefill_chunk_layout(
+    tables: jnp.ndarray,  # [B, P] int32 (masked lanes' rows already zeroed)
+    start: jnp.ndarray,  # [B] int32 — absolute position of each chunk's row 0
+    n_valid: jnp.ndarray,  # [B] int32 — real tokens in each row (1..C)
+    chunk: int,  # C, the (static) padded chunk width
+    page_size: int,
+    mask: jnp.ndarray,  # [B] bool — slot actively prefilling this tick
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row write masking for a ragged batched-prefill chunk.
+
+    Returns ``(tables_ext [B, P+1], positions [B, C])``:
+
+    * ``tables_ext`` appends one all-zero **sentinel column** to the page
+      tables.  Page-table reads clamp out-of-range columns, so without the
+      sentinel an overlong position could clamp onto the *last mapped* page
+      and clobber live KV; with it, every out-of-range column lands on the
+      reserved scratch page 0.
+    * ``positions[b, s]`` is ``start[b] + s`` for valid tokens.  Padding
+      tokens of active rows are positioned at ``P * page_size`` — exactly the
+      sentinel column — so their quantize-on-write goes to scratch; inactive
+      lanes sit at position 0 of their zeroed table row (also scratch) and
+      keep the page loop's per-slot trip count at one.
+
+    The kernel needs no other change: per-row causal bounds come from
+    ``positions[:, 0] + r // group``, and a valid token at ``start + s``
+    never sees a padding position (``start + s' > start + s`` for every
+    padding ``s'``), so garbage flows only into garbage rows.
+    """
+    B, P = tables.shape
+    tables_ext = jnp.concatenate(
+        [tables, jnp.zeros((B, 1), tables.dtype)], axis=1)
+    s = jnp.arange(chunk, dtype=jnp.int32)[None, :]
+    valid = mask[:, None] & (s < n_valid[:, None])
+    start_safe = jnp.where(mask, start, 0).astype(jnp.int32)
+    sentinel = jnp.int32(P * page_size)
+    positions = jnp.where(
+        valid, start_safe[:, None] + s,
+        jnp.where(mask[:, None], sentinel, 0))
+    return tables_ext, positions
 
 
 # ---------------------------------------------------------------------------

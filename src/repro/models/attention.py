@@ -162,11 +162,15 @@ def dispatch_attention(
 
 def _paged_decode(params, x, q, positions, seed, cfg: ModelConfig,
                   paged: PagedKV, method):
-    """Batched decode/verify directly over the packed pool: quantize-scatter
-    the S new tokens' KV (positions[b, s] drives the page lookup), then run
-    the fused paged-attention kernel with per-row causal bounds.  S == 1 is
-    plain decode; S > 1 is the speculative verify step (last accepted token +
-    drafted suffix scored in one call)."""
+    """Batched decode/verify/prefill directly over the packed pool:
+    quantize-scatter the S new tokens' KV (positions[b, s] drives the page
+    lookup), then run the fused paged-attention kernel with per-row causal
+    bounds.  S == 1 is plain decode; S > 1 is the speculative verify step
+    (last accepted token + drafted suffix) or a batched prefill chunk (every
+    prefilling slot's next S prompt tokens) scored in one call.  Positions
+    fully drive write masking: the serve-side layout redirects padding /
+    out-of-budget tokens to a page-table column holding the scratch page, so
+    this function needs no mask operand."""
     hd, nkv = cfg.head_dim_, cfg.num_kv_heads
     qc = cfg.quartet
     k = _split_heads(L.dense(params["wk"], x, L.seed_fold(seed, 2), qc, method), nkv, hd)

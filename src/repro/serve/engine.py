@@ -6,20 +6,28 @@ slots:
 * ``submit(prompt, max_new, sampling=...) -> Request`` queues work (the
   returned object is the handle; ``.tokens`` fills in as the engine runs),
 * ``step()`` advances the world by one scheduler tick: admit queued requests
-  into free slots, run one chunked-prefill call per prefilling request, then
-  step every decoding slot in **one** jitted call,
+  into free slots, advance every prefilling request by one chunk — paged
+  families in **one** batched jitted call over the packed pool — then step
+  every decoding slot in **one** jitted call,
 * ``drain()`` steps until nothing is queued or active.
 
 Model families with positional attention KV (``dense``/``moe``) store their
 cache in :class:`PagedCache` pages — optionally MXFP4-packed (4.25
-bits/element) with quantize-on-write.  Batched decode attends *directly over
-the packed pool* via the fused Pallas paged-attention kernel (the raw pool +
-int32 page tables are operands of the one jitted decode step; no dense
-[L, B, T, Hkv, hd] gather is ever materialized).  The legacy
-gather-dequantize decode survives as a parity oracle behind
+bits/element) with quantize-on-write.  Batched decode AND batched prefill
+attend *directly over the packed pool* via the fused Pallas paged-attention
+kernel (the raw pool + int32 page tables are operands of the jitted steps;
+no dense [L, B, T, Hkv, hd] gather is ever materialized).  Prefill advances
+ALL prefilling slots per tick in one ``[n_slots, prefill_chunk]`` call:
+each slot's chunk is quantize-scattered into its own pages at its own start
+offset, ragged tails are padded and write-masked onto the scratch sentinel
+column, and the multi-query kernel applies per-row causal bounds — so
+prefill HBM traffic is O(packed KV) and TTFT no longer degrades linearly
+with concurrent arrivals.  The legacy gather-dequantize decode and
+per-slot-gather prefill survive together as a parity oracle behind
 ``EngineConfig(decode_backend="gather")``.  Other families (SSM recurrent
 state, hybrid, enc-dec / VLM cross-KV) fall back to :class:`DenseSlotCache`
-but schedule identically.
+but schedule identically — and keep per-slot chunk-then-single-token
+prefill, since an SSM recurrence must never consume a padding token.
 
 **Speculative decoding** (``EngineConfig(spec=SpecConfig(...))``, paged
 families): each decode tick becomes draft → verify → accept.  A pluggable
@@ -27,11 +35,15 @@ proposer (``serve.spec.proposers``) drafts ``k`` tokens per slot; ONE jitted
 verify call scores all ``k + 1`` tokens per slot directly over the packed
 pool (multi-query paged-attention with per-row causal bounds); the host
 accepts the longest draft prefix the target model itself reproduces and
-emits 1..k+1 tokens.  Rejected suffixes are rolled back with
-``PagedCache.truncate`` — the slot's logical length shrinks and
-now-unreferenced trailing pages return to the free list.  Greedy
-self-speculation is token-exact against the non-speculative engine (the
-extended parity-oracle contract).
+emits 1..k+1 tokens.  Rollback is purely *logical*: the slot's length
+shrinks on the host and the rejected suffix's positions become unreachable
+(causal bounds + rewrite-before-read), while the pages themselves stay
+mapped — admission reserved them for ``prompt + max_new`` and nothing a
+speculative tick does may map beyond that reservation, so a full pool can
+never raise "out of pages" mid-flight.  Draft positions past the token
+budget redirect their writes to the scratch page (their KV is never read
+by any emittable row).  Greedy self-speculation is token-exact against the
+non-speculative engine (the extended parity-oracle contract).
 
 Sampling is per request (:class:`~repro.serve.sampling.SamplingParams`):
 greedy argmax by default; temperature / top-k / top-p draws use stateless
@@ -41,10 +53,13 @@ drafted position independently.
 Both paths reuse the same step builders as ``train.serve.greedy_generate``
 (``make_chunk_prefill_step`` / ``make_decode_step`` / ``make_verify_step``
 via :func:`repro.serve.steps.build_paged_steps`), so engine outputs are
-token-for-token those of the reference loop in dense-cache mode.  At most
-four shapes compile per engine: the ``[n_slots]`` decode, the
-``[n_slots, k+1]`` verify, the ``[1, prefill_chunk]`` prefill chunk, and the
-``[1, 1]`` remainder chunk.
+token-for-token those of the reference loop in dense-cache mode.  On the
+default paged backend exactly three shapes compile per engine: the
+``[n_slots]`` decode, the ``[n_slots, k+1]`` verify, and the
+``[n_slots, prefill_chunk]`` batched prefill (ragged tails are padded into
+it — there is no ``[1, 1]`` remainder shape).  The gather oracle and the
+dense-slot families keep the per-slot ``[1, prefill_chunk]`` + ``[1, 1]``
+prefill shapes.
 """
 
 from __future__ import annotations
@@ -64,7 +79,7 @@ from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec.config import SpecConfig
 from repro.serve.spec.proposers import build_proposer
 from repro.serve.spec.verify import accept_tokens
-from repro.serve.steps import build_paged_steps
+from repro.serve.steps import build_paged_steps, marshal_prefill_batch
 from repro.train.serve import make_chunk_prefill_step, make_decode_step
 
 PAGED_FAMILIES = ("dense", "moe")
@@ -80,11 +95,19 @@ class EngineConfig:
     method: str = "quartet"
     eos_id: int | None = None
     keep_logits: bool = False  # record per-step logits on each Request (tests)
-    # batched-decode attention path for paged families:
+    # batched attention path for paged families (decode, verify AND prefill):
     #   None     — follow ModelConfig.attn_backend ("paged" unless overridden)
-    #   "paged"  — fused Pallas kernel directly over the packed pool (default)
-    #   "gather" — legacy gather-dequantize-to-dense oracle (parity testing)
+    #   "paged"  — fused Pallas kernel directly over the packed pool (default);
+    #              prefill runs batched across all prefilling slots
+    #   "gather" — legacy gather-dequantize-to-dense oracle (parity testing);
+    #              prefill stays the per-slot [1, C] + [1, 1] chunk loop
     decode_backend: str | None = None
+    # pool size override (pages incl. the scratch page).  None → one full
+    # reservation (ceil(max_len / page_size) pages) per slot + scratch.
+    # Admission reserves prompt + max_new pages up front and NOTHING maps
+    # beyond a reservation mid-flight, so a pool sized exactly to the
+    # reservations it admits can never raise "out of pages".
+    n_pages: int | None = None
     # speculative decoding (paged families only); None → plain decode
     spec: SpecConfig | None = None
 
@@ -105,14 +128,25 @@ class Engine:
         self.steps = 0
 
         if self.paged:
-            # +k headroom: a verify burst writes up to k positions past the
-            # request's reserved prompt+max_new window; ``ensure`` maps those
-            # pages on demand and ``truncate`` returns the unused ones
+            # sizing (table width vs pool pages) is the shared reservation-
+            # contract rule — see paged_cache.reservation_sizing
             spec_k = self.spec.k if self.spec else 0
-            pages_per_slot = -(-(cfg.max_len + spec_k) // cfg.page_size)
+            pages_per_slot, n_pages = P.reservation_sizing(
+                cfg.n_slots, cfg.max_len, cfg.page_size, spec_k)
+            if cfg.n_pages is not None:
+                # fail fast: a pool that cannot hold even one maximal
+                # reservation would wedge admission forever (can_admit False
+                # on every tick) instead of erroring
+                min_pages = 1 + (-(-cfg.max_len // cfg.page_size))
+                if cfg.n_pages < min_pages:
+                    raise ValueError(
+                        f"n_pages={cfg.n_pages} cannot hold one max_len="
+                        f"{cfg.max_len} reservation plus the scratch page "
+                        f"(need >= {min_pages})")
+                n_pages = cfg.n_pages
             self.cache = P.PagedCache(
                 model, n_slots=cfg.n_slots, pages_per_slot=pages_per_slot,
-                page_size=cfg.page_size, kv_dtype=cfg.kv_dtype)
+                page_size=cfg.page_size, n_pages=n_pages, kv_dtype=cfg.kv_dtype)
             self.decode_backend = cfg.decode_backend or (
                 "paged" if model.cfg.attn_backend == "paged" else "gather")
             self._steps = build_paged_steps(
@@ -121,6 +155,7 @@ class Engine:
             self._decode_all = self._steps.decode_all
             self._prefill_chunk = self._steps.prefill_chunk
             self._verify_all = self._steps.verify_all
+            self._prefill_all = self._steps.prefill_all  # None on gather
         else:
             self.cache = P.DenseSlotCache(model, n_slots=cfg.n_slots,
                                           max_len=cfg.max_len)
@@ -141,6 +176,7 @@ class Engine:
 
             self._decode_all = jax.jit(decode_all)
             self._prefill_chunk = jax.jit(prefill_chunk)
+            self._prefill_all = None  # dense slots: SSM state must never see padding
 
         self.proposer = (build_proposer(self, self.spec)
                          if self.spec is not None else None)
@@ -176,9 +212,15 @@ class Engine:
             if self.proposer is not None:
                 self.proposer.on_admit(req)
 
-        # -- chunked prefill (one chunk per prefilling request per tick) ----
-        for req in self.sched.prefilling():
-            self._advance_prefill(req, now)
+        # -- chunked prefill: ALL prefilling paged slots in one jitted call
+        #    (gather oracle / dense slots: one per-slot call each) ----------
+        if self._prefill_all is not None:
+            batch = self.sched.prefill_batch()
+            if batch:
+                self._prefill_tick(batch, now)
+        else:
+            for req in self.sched.prefilling():
+                self._advance_prefill(req, now)
 
         # -- one batched decode/verify over all decoding slots ---------------
         decoding = self.sched.decoding()
@@ -227,7 +269,38 @@ class Engine:
         req.prefill_pos += tokens_np.shape[0]
         return logits
 
+    def _prefill_tick(self, batch, now: float) -> None:
+        """Advance EVERY prefilling slot by one chunk in ONE jitted call over
+        the packed pool (paged backend).  Rows are ``[n_slots, C]`` with
+        ragged tails padded; the step write-masks padding onto the scratch
+        sentinel column and returns each row's last-valid-token logits, from
+        which slots that just consumed their whole prompt sample their first
+        token."""
+        tokens, start, n_valid, mask = marshal_prefill_batch(
+            self.config.n_slots, self.config.prefill_chunk,
+            ((req.slot, pos, req.prompt[pos:pos + n]) for req, pos, n in batch))
+        logits, self.cache.pool = self._prefill_all(
+            self.params, jnp.asarray(tokens), jnp.asarray(start),
+            jnp.asarray(n_valid), self.cache.pool,
+            jnp.asarray(self.cache.tables), jnp.asarray(mask))
+        logits_np = None  # [B, V]; fetched only if some slot finished
+        for req, pos, n in batch:
+            req.prefill_pos = pos + n
+            if req.prefill_pos == req.prompt_len:
+                if logits_np is None:
+                    logits_np = np.asarray(logits, np.float32)
+                row = logits_np[req.slot]
+                tok = self._sample(req, row, 0)
+                if self.config.keep_logits:
+                    req.logits_trace.append(row)
+                req.tokens.append(tok)
+                req.first_token_time = now
+                req.state = RequestState.DECODE
+                self._maybe_finish(req, now)
+
     def _advance_prefill(self, req: Request, now: float) -> None:
+        """Per-slot prefill: the gather parity oracle and the dense-slot
+        families (whose SSM recurrences must never see padding)."""
         C = self.config.prefill_chunk
         remaining = req.prompt_len - req.prefill_pos
         if remaining >= C:
@@ -284,16 +357,24 @@ class Engine:
         write-before-read causal invariant) and returns k+1 logit rows;
         row i is the target's distribution after consuming token i.  The
         host accepts the longest draft prefix the target's own draws
-        reproduce, emits the correction/bonus draw, then truncates the
-        slot back to its logical length so rejected-suffix pages free up.
+        reproduce and emits the correction/bonus draw.
+
+        No pages are mapped for the burst: admission already reserved
+        ``prompt + max_new`` and the engine never maps beyond that
+        reservation ("reserved up front so decode never OOMs" — mapping
+        speculative headroom on demand from a full pool is exactly how the
+        old ``ensure(p0 + k + 1)`` could raise "out of pages" mid-flight).
+        Draft positions past the budget fall on unmapped (zero) table
+        columns, so their quantize-on-write redirects to the scratch page;
+        every row whose draw can be EMITTED attends only to reserved,
+        properly-written positions, so emitted tokens never see the
+        garbage.  Rollback is likewise logical-only: the host shrinks the
+        slot's length and the rejected positions become unreachable (causal
+        bounds + rewrite-before-read), with no page traffic.
         """
         cfg, k = self.config, self.spec.k
         B = cfg.n_slots
         eos = cfg.eos_id
-
-        for req in decoding:  # map headroom for the burst before any writes
-            p0 = req.prompt_len + len(req.tokens) - 1
-            self.cache.ensure(req.slot, p0 + k + 1)
 
         drafts = self.proposer.propose(decoding)  # [n_slots, k] int32
 
@@ -316,22 +397,35 @@ class Engine:
                       for i in range(k + 1)]
             n_acc, emitted = accept_tokens(drafts[req.slot].tolist(), target)
             req.decode_calls += 1
-            req.draft_proposed += k
-            req.draft_accepted += n_acc
+            n_emit, stopped = 0, False
             for i, tok in enumerate(emitted):
                 if self.config.keep_logits:
                     req.logits_trace.append(logits_np[req.slot, i])
                 req.tokens.append(tok)
+                n_emit += 1
                 if ((eos is not None and tok == eos)
                         or len(req.tokens) >= req.max_new):
+                    stopped = True
                     break  # emission stops at EOS / budget even mid-burst
+            # acceptance accounting counts only drafts at EMITTABLE
+            # positions: when emission stops mid-burst (EOS / budget) the
+            # drafts past the stop could never have been emitted, and
+            # counting them as proposed-but-not-accepted skews
+            # acceptance_rate low for short-tail requests (the self-proposer
+            # oracle must report exactly 1.0 even on a request that hits its
+            # budget mid-burst).  A burst that ends by REJECTION still
+            # counts all k drafts — the rejected draft's unreached
+            # successors were honestly proposed and scored, and dropping
+            # them would bias acceptance upward for real proposers.
+            proposed = min(n_emit if stopped else k, k)
+            req.draft_proposed += proposed
+            req.draft_accepted += min(n_acc, proposed)
             self._maybe_finish(req, now)
             if not req.done:
-                # rollback: drop the rejected suffix's pages; valid KV covers
-                # t and the accepted drafts, the freshly emitted token is fed
-                # (and written) by the next tick
-                logical = req.prompt_len + len(req.tokens) - 1
-                self.cache.truncate(req.slot, logical)
+                # rollback is logical: the rejected suffix's positions are
+                # simply beyond the new length — pages stay mapped within the
+                # admission reservation and every position is rewritten
+                # before it is next read
                 self.proposer.on_accept(req)
 
     def _maybe_finish(self, req: Request, now: float) -> None:

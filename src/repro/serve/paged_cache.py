@@ -37,6 +37,7 @@ from repro.core import formats as F
 from repro.core import quantizers as Q
 from repro.kernels.paged_attention import (  # noqa: F401  (re-exports)
     PagedKV,
+    prefill_chunk_layout,
     quant_fmt as _quant_fmt,
     scatter_token,
 )
@@ -65,10 +66,11 @@ def gather_pages(pool: dict, tables: jnp.ndarray, dtype) -> tuple[jnp.ndarray, j
     tables [B, n_pages_per_slot] int32 → (k, v) [L, B, T, Hkv, hd] with
     T = n_pages_per_slot · page_size, dequantizing if the pool is packed.
 
-    Used by per-slot chunked prefill (one slot's pages at a time) and by the
-    ``decode_backend="gather"`` parity oracle; the default batched decode
-    attends directly over the packed pool (``kernels/paged_attention``) and
-    never materializes this dense view.
+    Used only by the ``decode_backend="gather"`` parity oracle (per-slot
+    chunked prefill and gather decode/verify); the default paged backend —
+    batched decode, verify AND batched prefill — attends directly over the
+    packed pool (``kernels/paged_attention``) and never materializes this
+    dense view.
     """
 
     def one(codes, scales=None):
@@ -107,6 +109,25 @@ def scatter_tokens(pool: dict, page_ids: jnp.ndarray, offsets: jnp.ndarray,
         "v_codes": pool["v_codes"].at[:, page_ids, offsets].set(vq.codes),
         "v_scales": pool["v_scales"].at[:, page_ids, offsets].set(vq.scales),
     }
+
+
+def reservation_sizing(n_slots: int, max_len: int, page_size: int,
+                       spec_k: int = 0) -> tuple[int, int]:
+    """``(pages_per_slot, n_pages)`` under the admission-reservation contract
+    — the ONE sizing rule shared by the engine's target cache and the draft
+    proposer's mirror cache (they must not drift: the no-OOM contract rests
+    on it).
+
+    Page-table WIDTH carries ``+spec_k`` sentinel-capacity columns so a
+    speculative burst's beyond-budget positions index the table in bounds
+    (their entries are never mapped, redirecting writes to scratch page 0);
+    the POOL holds exactly one full reservation of
+    ``ceil(max_len / page_size)`` pages per slot plus the scratch page —
+    mapped pages never exceed a request's admission reservation, so no +k
+    pool headroom exists or is needed."""
+    pages_per_slot = -(-(max_len + spec_k) // page_size)
+    n_pages = 1 + n_slots * (-(-max_len // page_size))
+    return pages_per_slot, n_pages
 
 
 # ---------------------------------------------------------------------------
@@ -171,13 +192,20 @@ class PagedCache:
         return n <= min(len(self._free), self.pages_per_slot)
 
     def alloc(self, slot: int, n_tokens: int) -> None:
-        """Map enough pages onto ``slot`` to hold ``n_tokens`` positions."""
+        """Map enough pages onto ``slot`` to hold ``n_tokens`` positions.
+
+        A slot that still carries live mappings is freed first — zeroing the
+        table row without returning its pages would silently leak them if the
+        engine's alloc/free ordering ever regresses, shrinking the pool until
+        admission wedges.  Page conservation (mapped + free == n_pages - 1)
+        therefore survives re-alloc."""
         n = self.pages_needed(n_tokens)
         if n > self.pages_per_slot:
             raise ValueError(f"{n_tokens} tokens need {n} pages > pages_per_slot={self.pages_per_slot}")
+        if self.tables[slot].any():
+            self.free(slot)
         if n > len(self._free):
             raise RuntimeError(f"out of pages: need {n}, free {len(self._free)}")
-        self.tables[slot] = 0
         for i in range(n):
             self.tables[slot, i] = self._free.pop()
 
@@ -198,8 +226,11 @@ class PagedCache:
 
     def ensure(self, slot: int, n_tokens: int) -> int:
         """Extend ``slot``'s mapping to cover ``n_tokens`` positions (no-op if
-        already covered).  Used by the speculative verifier to map headroom
-        for a drafted suffix before it is scored; returns pages added."""
+        already covered); returns pages added.  Allocator primitive: the
+        engine itself never maps beyond a request's admission reservation
+        mid-flight (that is the "reserved up front so decode never OOMs"
+        contract — speculative writes past the budget redirect to the
+        scratch page instead of mapping headroom on demand)."""
         need = self.pages_needed(n_tokens)
         if need > self.pages_per_slot:
             raise ValueError(
@@ -215,13 +246,16 @@ class PagedCache:
         return need - have
 
     def truncate(self, slot: int, n_tokens: int) -> int:
-        """Speculative-decoding rollback: shrink ``slot``'s logical length to
-        ``n_tokens`` and unmap the now-unreferenced *trailing* pages (pages
-        wholly past ``ceil(n_tokens / page_size)``).  Page contents are left
-        as-is — causal masking makes positions ≥ the logical length
-        unreachable, and a future ``ensure`` re-maps (possibly different)
-        pages that are rewritten before they are read, exactly like any
-        recycled page.  Keeps the free list sorted descending (same contract
+        """Shrink ``slot``'s mapping to cover only ``n_tokens`` positions,
+        unmapping the *trailing* pages (pages wholly past
+        ``ceil(n_tokens / page_size)``).  Page contents are left as-is —
+        causal masking makes positions ≥ the logical length unreachable, and
+        a future ``ensure`` re-maps (possibly different) pages that are
+        rewritten before they are read, exactly like any recycled page.
+        Allocator primitive: speculative rollback in the engine is logical
+        (lengths shrink, pages stay mapped within the reservation), so this
+        is for cache-external policies that really do want to give pages
+        back early.  Keeps the free list sorted descending (same contract
         as :meth:`free`); returns the number of pages released."""
         keep = self.pages_needed(n_tokens)
         released = 0

@@ -9,10 +9,14 @@ State machine per request::
 The scheduler is pure host logic: it decides *which* slots prefill/decode
 each step and tracks timing; the engine owns the device state and jitted
 steps.  Prefill is chunked — each engine step advances every PREFILL request
-by at most ``prefill_chunk`` tokens (then its remainder tokens singly, so no
-chunk is ever padded and SSM recurrences never see garbage), while all
-DECODE slots step together in one jitted call.  This bounds the latency any
-single long prompt can impose on in-flight decodes.
+by at most ``prefill_chunk`` tokens — and all DECODE slots step together in
+one jitted call.  This bounds the latency any single long prompt can impose
+on in-flight decodes.  How a tick's chunks execute is the engine's choice:
+paged families run every prefilling slot in ONE batched jitted call
+(``prefill_batch`` supplies the ragged per-slot chunks; tails are padded and
+write-masked in the kernel layout), while dense-slot families keep one
+per-slot call and finish remainders with single-token chunks, because SSM
+recurrences must never see padding tokens.
 """
 
 from __future__ import annotations
@@ -136,6 +140,19 @@ class Scheduler:
 
     def prefilling(self) -> list[Request]:
         return [r for r in self.active.values() if r.state is RequestState.PREFILL]
+
+    def prefill_batch(self) -> list[tuple[Request, int, int]]:
+        """One ``(req, start, n_valid)`` chunk per PREFILL request for this
+        tick: ``start`` is the request's consumed-prompt offset and
+        ``n_valid = min(prefill_chunk, remaining)`` its ragged valid count —
+        the batched paged prefill pads rows to ``prefill_chunk`` and write-
+        masks the tail, so every prefilling slot advances in ONE jitted call
+        regardless of how its prompt straddles chunk/page boundaries."""
+        return [
+            (r, r.prefill_pos,
+             min(self.prefill_chunk, r.prompt_len - r.prefill_pos))
+            for r in self.prefilling()
+        ]
 
     def decoding(self) -> list[Request]:
         return [r for r in self.active.values() if r.state is RequestState.DECODE]

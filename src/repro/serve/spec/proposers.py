@@ -20,8 +20,13 @@ Three built-ins behind a string registry (``SpecConfig.proposer``):
 * ``"draft"`` — a separate (small) registry model running in FP4 with its
   own :class:`~repro.serve.paged_cache.PagedCache`; drafts via k sequential
   decode steps on the draft cache.  The draft cache mirrors the target's
-  slot lifecycle: admit → alloc, accept → truncate-rollback, retire → free,
-  and lazily prefills a slot's context on its first spec tick.
+  slot lifecycle: admit → alloc (the full prompt+max_new reservation —
+  nothing maps beyond it mid-flight, same contract as the target cache),
+  accept → logical rollback of the synced length, retire → free.  A slot's
+  context is lazily prefilled on its first spec tick — batched across slots
+  through the same ``prefill_all`` step the engine uses, so draft-cache
+  catch-up costs one jitted call per chunk-width regardless of how many
+  slots are behind.
 
 Custom proposers: subclass :class:`Proposer` and decorate with
 ``@register_proposer("name")``.
@@ -165,10 +170,14 @@ class DraftModelProposer(Proposer):
 
     ``synced[slot]`` tracks how many context positions have valid KV in the
     draft cache.  A slot's context is prefilled lazily on its first spec
-    tick (chunked, same [1, C] / [1, 1] shapes as the engine); after each
-    verify tick ``on_accept`` rolls the draft cache back in lock-step with
-    the target (``truncate`` + synced shrink), so rejected draft KV never
-    leaks into later proposals' visible range.
+    tick — all behind slots together through the draft model's own batched
+    ``prefill_all`` step (per-slot [1, C] / [1, 1] chunks only on the gather
+    backend); after each verify tick ``on_accept`` shrinks ``synced`` in
+    lock-step with the target's accepted length, so rejected draft KV is
+    rewritten before any later proposal can see it.  Pages are mapped once
+    at admission (the prompt+max_new reservation) and never beyond it:
+    draft-loop writes past the budget redirect to the scratch page exactly
+    as in the target cache.
     """
 
     def __init__(self, engine, spec):
@@ -178,7 +187,7 @@ class DraftModelProposer(Proposer):
                              "'draft' proposer")
         from repro.configs import get_config, get_reduced_config
         from repro.models import build_model
-        from repro.serve.paged_cache import PagedCache
+        from repro.serve.paged_cache import PagedCache, reservation_sizing
         from repro.serve.steps import build_paged_steps
 
         dcfg = (get_reduced_config(spec.draft_arch) if spec.draft_reduced
@@ -188,10 +197,12 @@ class DraftModelProposer(Proposer):
         self.model = build_model(dcfg)
         self.params = self.model.init(jax.random.PRNGKey(spec.draft_seed))
         ecfg = engine.config
+        pages_per_slot, n_pages = reservation_sizing(
+            ecfg.n_slots, ecfg.max_len, ecfg.page_size, spec.k)
         self.cache = PagedCache(
-            self.model, n_slots=ecfg.n_slots,
-            pages_per_slot=-(-(ecfg.max_len + spec.k) // ecfg.page_size),
-            page_size=ecfg.page_size, kv_dtype=spec.draft_kv_dtype)
+            self.model, n_slots=ecfg.n_slots, pages_per_slot=pages_per_slot,
+            page_size=ecfg.page_size, n_pages=n_pages,
+            kv_dtype=spec.draft_kv_dtype)
         self._steps = build_paged_steps(
             self.model, method=spec.draft_method, page_size=ecfg.page_size,
             n_layers=self.cache.layers,
@@ -207,7 +218,6 @@ class DraftModelProposer(Proposer):
     def on_accept(self, req):
         logical = req.prompt_len + len(req.tokens) - 1
         self.synced[req.slot] = min(int(self.synced[req.slot]), logical)
-        self.cache.truncate(req.slot, int(self.synced[req.slot]))
 
     def on_retire(self, req):
         self.cache.free(req.slot)
@@ -215,32 +225,62 @@ class DraftModelProposer(Proposer):
 
     # -- drafting -----------------------------------------------------------
 
-    def _sync(self, req) -> None:
-        """Catch the draft cache up to the request's context minus its last
-        token (which the draft loop feeds itself)."""
+    def _sync_all(self, decoding) -> None:
+        """Catch every behind slot's draft cache up to its context minus its
+        last token (which the draft loop feeds itself) — batched: one
+        ``prefill_all`` call per chunk-width advances ALL behind slots
+        together (ragged tails padded + write-masked in the step)."""
         import jax.numpy as jnp
 
-        p0 = req.prompt_len + len(req.tokens) - 1
-        have = int(self.synced[req.slot])
-        if have >= p0:
+        targets = {r.slot: r.prompt_len + len(r.tokens) - 1 for r in decoding}
+        # steady state (every tick after the first sync) exits before
+        # materializing any context copies
+        behind = [r for r in decoding
+                  if int(self.synced[r.slot]) < targets[r.slot]]
+        if not behind:
             return
-        self.cache.ensure(req.slot, p0)
-        ctx = np.concatenate([req.prompt, np.asarray(req.tokens, np.int32)])
+        ctxs = {r.slot: np.concatenate([r.prompt, np.asarray(r.tokens, np.int32)])
+                for r in behind}
         C = self.engine.config.prefill_chunk
-        table_row = jnp.asarray(self.cache.tables[req.slot])
-        while have < p0:
-            step = C if p0 - have >= C else 1
-            toks = jnp.asarray(ctx[have:have + step][None, :], jnp.int32)
-            _, self.cache.pool = self._steps.prefill_chunk(
-                self.params, toks, jnp.int32(have), table_row, self.cache.pool)
-            have += step
-        self.synced[req.slot] = have
+        B = self.engine.config.n_slots
+        if self._steps.prefill_all is None:  # gather oracle: per-slot chunks
+            for r in behind:
+                table_row = jnp.asarray(self.cache.tables[r.slot])
+                have, p0 = int(self.synced[r.slot]), targets[r.slot]
+                while have < p0:
+                    step = C if p0 - have >= C else 1
+                    toks = jnp.asarray(
+                        ctxs[r.slot][have:have + step][None, :], jnp.int32)
+                    _, self.cache.pool = self._steps.prefill_chunk(
+                        self.params, toks, jnp.int32(have), table_row,
+                        self.cache.pool)
+                    have += step
+                self.synced[r.slot] = have
+            return
+        from repro.serve.steps import marshal_prefill_batch
+
+        while True:
+            items = []
+            for r in behind:
+                have, p0 = int(self.synced[r.slot]), targets[r.slot]
+                if have >= p0:
+                    continue
+                n = min(C, p0 - have)
+                items.append((r.slot, have, ctxs[r.slot][have:have + n]))
+            if not items:
+                return
+            tokens, start, n_valid, mask = marshal_prefill_batch(B, C, items)
+            _, self.cache.pool = self._steps.prefill_all(
+                self.params, jnp.asarray(tokens), jnp.asarray(start),
+                jnp.asarray(n_valid), self.cache.pool,
+                jnp.asarray(self.cache.tables), jnp.asarray(mask))
+            for r in behind:
+                self.synced[r.slot] = min(self.synced[r.slot] + n_valid[r.slot],
+                                          targets[r.slot])
 
     def propose(self, decoding):
         k = self.spec.k
-        for r in decoding:
-            self._sync(r)
-            self.cache.ensure(r.slot, r.prompt_len + len(r.tokens) - 1 + k)
+        self._sync_all(decoding)
         drafts = _draft_loop(self.engine, decoding, k, steps=self._steps,
                              pool_owner=self.cache, params=self.params,
                              tables=self.cache.tables)

@@ -7,15 +7,27 @@ and scatter plumbing.  Each builder closes over a model and returns pure
 functions of ``(params, …, pool, tables, mask)`` — device state in, device
 state out; the caller owns the pool.
 
-Three step kinds per paged model:
+Four step kinds per paged model:
 
 * ``decode_all``    — one token for every slot in one call (S == 1),
-* ``prefill_chunk`` — one slot's ``[1, C]`` prompt chunk (gather path),
+* ``prefill_all``   — one ``[n_slots, C]`` chunk for EVERY prefilling slot in
+  one call, quantize-scattering each slot's tokens into its own pages and
+  attending *directly over the packed pool* with per-slot start offsets and
+  per-row causal bounds (paged backend only; ragged tails are padded and
+  write-masked onto the scratch sentinel column —
+  ``kernels.paged_attention.prefill_chunk_layout``),
+* ``prefill_chunk`` — one slot's ``[1, C]`` prompt chunk via gather-
+  dequantize to a dense view; survives as the ``decode_backend="gather"``
+  prefill parity oracle (and the dense-slot families' shape),
 * ``verify_all``    — S = k+1 tokens for every slot in one call: the
   speculative verify.  With ``decode_backend="paged"`` the drafted suffix is
   scored *directly over the packed MXFP4 pool* (multi-query paged-attention
   kernel, per-row causal bounds); ``"gather"`` materializes the dense view
   and survives as the parity oracle.
+
+``prefill_all`` and ``verify_all`` are the same device computation at
+different S: both feed the rows-unshared model with explicit per-token
+positions and let the multi-query paged kernel apply per-row bounds.
 
 Masked lanes follow the engine invariants: positions are clamped to 0 and
 table rows zeroed, so writes land on the reserved scratch page and the
@@ -28,6 +40,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import Model
 from repro.serve import paged_cache as P
@@ -38,10 +51,36 @@ from repro.train.serve import (
 )
 
 
+def marshal_prefill_batch(n_slots: int, chunk: int, items):
+    """Host-side operand marshalling for one ``prefill_all`` call.
+
+    ``items`` yields ``(slot, start, tokens_np)`` with
+    ``1 <= len(tokens_np) <= chunk``; returns padded numpy operands
+    ``(tokens [n_slots, chunk], start [n_slots], n_valid [n_slots],
+    mask [n_slots])``.  The ONE definition of the padding/masking convention
+    shared by the engine's prefill tick and the draft proposer's context
+    sync — the device step relies on rows past ``n_valid`` being ignorable
+    and on masked lanes being all-zero, so both callers must marshal
+    identically.
+    """
+    tokens = np.zeros((n_slots, chunk), np.int32)
+    start = np.zeros((n_slots,), np.int32)
+    n_valid = np.zeros((n_slots,), np.int32)
+    mask = np.zeros((n_slots,), bool)
+    for slot, s0, toks in items:
+        n = len(toks)
+        tokens[slot, :n] = toks
+        start[slot], n_valid[slot], mask[slot] = s0, n, True
+    return tokens, start, n_valid, mask
+
+
 class PagedSteps(NamedTuple):
     decode_all: Callable  # (params, tokens [B,1], positions [B], pool, tables, mask) -> (logits [B,V], pool)
     prefill_chunk: Callable  # (params, tokens [1,C], start, table_row, pool, extra) -> (logits [1,V], pool)
     verify_all: Callable  # (params, tokens [B,S], start [B], pool, tables, mask) -> (logits [B,S,V], pool)
+    # (params, tokens [B,C], start [B], n_valid [B], pool, tables, mask)
+    #   -> (last-valid-token logits [B,V], pool); None on the gather backend
+    prefill_all: Callable | None
 
 
 def build_paged_steps(model: Model, *, method: str, page_size: int,
@@ -80,6 +119,33 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
             paged = P.PagedKV(pool=pool, tables=_broadcast_tables(tables, mask))
             logits, new_caches = verify(params, tokens, pos_safe, paged)
             return logits, new_caches.pool
+
+        def prefill_all(params, tokens, start, n_valid, pool, tables, mask):
+            """Advance EVERY prefilling slot by one ragged [B, C] chunk in a
+            single call over the packed pool — no dense gather, no per-slot
+            loop, no [1, 1] remainder shape.  Tokens past a row's ``n_valid``
+            are padding: ``prefill_chunk_layout`` positions them on the
+            scratch sentinel column, so their quantize-on-write never touches
+            live pages and their output rows are garbage the host ignores
+            (MoE capacity routing does see padding rows — population-
+            dependent drops are a standing property of every batched step,
+            inert below the capacity floor; see the serve README caveat).
+            Returns each row's LAST VALID token logits (the only column the
+            engine ever reads — it samples the first generated token from the
+            final chunk)."""
+            tbl = jnp.where(mask[:, None], tables, 0)
+            C = tokens.shape[1]
+            tbl_ext, positions = P.prefill_chunk_layout(
+                tbl, start, n_valid, C, ps, mask)
+            pos_safe = jnp.where(mask, start, 0)
+            paged = P.PagedKV(
+                pool=pool,
+                tables=jnp.broadcast_to(tbl_ext[None], (n_layers, *tbl_ext.shape)))
+            logits, new_caches = verify(params, tokens, pos_safe, paged,
+                                        positions=positions)
+            last = logits[jnp.arange(tokens.shape[0]),
+                          jnp.clip(n_valid - 1, 0, C - 1)]
+            return last, new_caches.pool
     else:
 
         def decode_all(params, tokens, positions, pool, tables, mask):
@@ -129,5 +195,9 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
         pool = P.scatter_tokens(pool, table_row[pos // ps], pos % ps, k_c, v_c)
         return logits, pool
 
+    if decode_backend == "paged":
+        return PagedSteps(jax.jit(decode_all), jax.jit(prefill_chunk),
+                          jax.jit(verify_all), jax.jit(prefill_all))
+    # gather oracle: prefill stays the per-slot [1, C] + [1, 1] chunk loop
     return PagedSteps(jax.jit(decode_all), jax.jit(prefill_chunk),
-                      jax.jit(verify_all))
+                      jax.jit(verify_all), None)

@@ -73,22 +73,29 @@ def make_verify_step(model: Model, *, method: str = "quartet") -> Callable:
     (and ``logits[:, -1]`` yields the bonus token).  Same contract as
     :func:`make_chunk_prefill_step` except the full ``[B, S, V]`` logits are
     kept instead of only the last column; with a ``PagedKV`` cache the paged
-    backend scores all S tokens directly over the packed pool."""
+    backend scores all S tokens directly over the packed pool.
+
+    ``positions`` overrides the default ``start + arange(S)`` per-token
+    positions — the batched paged prefill (``serve.steps.prefill_all``)
+    passes positions where ragged-tail padding tokens are redirected to the
+    page table's scratch sentinel column, reusing this step as "verify a
+    whole prompt chunk per slot"."""
     import dataclasses
 
     from repro.models.registry import build_model
 
-    # verify rows sit at per-slot offsets: causal masks and rope angles must
-    # be computed per row, so this step runs on a model built with
-    # attn_rows_shared=False (train/prefill keep the row-shared fast path)
+    # verify / batched-prefill rows sit at per-slot offsets: causal masks and
+    # rope angles must be computed per row, so this step runs on a model built
+    # with attn_rows_shared=False (train/prefill keep the row-shared fast path)
     vmodel = build_model(dataclasses.replace(model.cfg, attn_rows_shared=False))
     compute_dtype = jnp.dtype(vmodel.cfg.dtype)
 
-    def verify(params, tokens, start, caches, extra=None):
+    def verify(params, tokens, start, caches, extra=None, positions=None):
         """tokens [B, S], start [B] → (logits [B, S, V] f32, caches)."""
         cparams = _cast_params(params, compute_dtype)
         B, S = tokens.shape
-        positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        if positions is None:
+            positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         logits, caches, _ = vmodel.forward(
             cparams, tokens, jnp.uint32(0), positions=positions, caches=caches,
             cache_index=start, extra=extra, method=method)

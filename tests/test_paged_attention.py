@@ -147,6 +147,108 @@ def test_paged_kernel_multi_query_parity(mode, S):
 
 
 @pytest.mark.kernels
+def test_prefill_chunk_layout_write_masking():
+    """Valid tokens position onto their own pages; padding of active rows
+    lands exactly on the appended all-zero sentinel column; inactive lanes
+    sit at position 0 of a zeroed row — every masked write resolves to the
+    scratch page."""
+    ps, P, C = 4, 3, 5
+    tables = jnp.asarray([[1, 2, 3], [4, 5, 0], [7, 8, 9]], jnp.int32)
+    mask = jnp.asarray([True, True, False])
+    tables = jnp.where(mask[:, None], tables, 0)  # engine zeroes masked rows
+    start = jnp.asarray([4, 0, 2], jnp.int32)
+    n_valid = jnp.asarray([5, 2, 3], jnp.int32)
+    tbl_ext, pos = PA.prefill_chunk_layout(tables, start, n_valid, C, ps, mask)
+    assert tbl_ext.shape == (3, P + 1)
+    assert bool(jnp.all(tbl_ext[:, -1] == 0))  # sentinel column
+    np.testing.assert_array_equal(np.asarray(pos[0]), [4, 5, 6, 7, 8])
+    np.testing.assert_array_equal(np.asarray(pos[1]), [0, 1, 12, 12, 12])
+    np.testing.assert_array_equal(np.asarray(pos[2]), [0, 0, 0, 0, 0])
+    # every position's page lookup: padding/inactive → page 0 (scratch)
+    page_ids = np.asarray(tbl_ext)[np.arange(3)[:, None], np.asarray(pos) // ps]
+    np.testing.assert_array_equal(page_ids[0], [2, 2, 2, 2, 3])
+    np.testing.assert_array_equal(page_ids[1], [4, 4, 0, 0, 0])
+    np.testing.assert_array_equal(page_ids[2], [0, 0, 0, 0, 0])
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("mode", ["dense", "mxfp4"])
+def test_paged_kernel_batched_prefill_parity(mode):
+    """Batched-prefill shape: C queries per slot at per-slot start offsets
+    with ragged valid counts.  Valid rows must match the blocked reference
+    with per-row positions; padding rows scatter only to the scratch page
+    (every real pool page is bit-identical to a run that wrote valid tokens
+    only)."""
+    ps, Hkv, group, hd, C = 4, 2, 2, 32, 6
+    starts = [4, 0, 9]
+    n_valid = [6, 3, 1]  # full chunk / ragged tail / single-token remainder
+    B = len(starts)
+    written = [s + n for s, n in zip(starts, n_valid)]
+    pages_per_slot = max(-(-max(written) // ps) + 1, 2)
+    rng = np.random.default_rng(21)
+    T = pages_per_slot * ps
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, hd)).astype(np.float32))
+
+    # context prefix (positions < start) written token-by-token, engine-style
+    n_pages = 1 + B * pages_per_slot
+    pool = _empty_pool(mode, n_pages, ps, Hkv, hd)
+    tables = np.zeros((B, pages_per_slot), np.int32)
+    nxt = 1
+    for b in range(B):
+        for p in range(-(-written[b] // ps)):
+            tables[b, p] = nxt
+            nxt += 1
+    tables = jnp.asarray(tables)
+    for b in range(B):
+        for t in range(starts[b]):
+            pool = PA.scatter_token(pool, tables[b, t // ps][None],
+                                    jnp.array([t % ps]), k[b, t][None], v[b, t][None])
+
+    # the chunk itself goes through the batched layout: padding tokens carry
+    # garbage K/V that must only ever reach the scratch page
+    mask = jnp.asarray([True] * B)
+    start_j = jnp.asarray(starts, jnp.int32)
+    nv_j = jnp.asarray(n_valid, jnp.int32)
+    tbl_ext, positions = PA.prefill_chunk_layout(tables, start_j, nv_j, C, ps, mask)
+    ck = np.asarray(rng.standard_normal((B, C, Hkv, hd)), np.float32)
+    cv = np.asarray(rng.standard_normal((B, C, Hkv, hd)), np.float32)
+    for b in range(B):  # place the chunk's real K/V into the dense reference
+        for s in range(n_valid[b]):
+            k = k.at[b, starts[b] + s].set(ck[b, s])
+            v = v.at[b, starts[b] + s].set(cv[b, s])
+    page_ids = tbl_ext[jnp.arange(B)[:, None], positions // ps]
+    pool = PA.scatter_token(pool, page_ids, positions % ps,
+                            jnp.asarray(ck), jnp.asarray(cv))
+
+    # write-masking conservation: non-scratch pages match a valid-only write
+    pool_ref = _empty_pool(mode, n_pages, ps, Hkv, hd)
+    for b in range(B):
+        for t in range(written[b]):
+            pool_ref = PA.scatter_token(pool_ref, tables[b, t // ps][None],
+                                        jnp.array([t % ps]), k[b, t][None],
+                                        v[b, t][None])
+    for key in pool:
+        np.testing.assert_array_equal(np.asarray(pool[key][1:]),
+                                      np.asarray(pool_ref[key][1:]))
+
+    if mode == "mxfp4":
+        fmt = PA.quant_fmt(hd)
+        k = Q.kv_dequantize(Q.kv_quantize(k, fmt), fmt)
+        v = Q.kv_dequantize(Q.kv_quantize(v, fmt), fmt)
+    q = jnp.asarray(rng.standard_normal((B, C, Hkv * group, hd)), jnp.float32)
+    lengths = start_j + 1  # tokens visible to each slot's FIRST chunk row
+    out = PA.paged_attention(q, pool, tbl_ext, lengths)
+    pos_ref = start_j[:, None] + jnp.arange(C)[None, :]
+    ref = blocked_attention(q, k, v, pos_ref, causal=True, kv_chunk=ps,
+                            shared_mask=False)
+    for b in range(B):  # padding rows are garbage by design — compare valid
+        np.testing.assert_allclose(np.asarray(out[b, :n_valid[b]]),
+                                   np.asarray(ref[b, :n_valid[b]]),
+                                   rtol=0, atol=1e-5)
+
+
+@pytest.mark.kernels
 def test_paged_kernel_mxfp4_bounded_vs_fp():
     """End-to-end quantization error: paged attention over the packed pool
     vs blocked attention over the *original* (unquantized) KV."""

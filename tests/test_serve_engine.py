@@ -118,6 +118,34 @@ def test_paged_allocator_freelist():
         cache.alloc(1, 8 * 5)  # exceeds pages_per_slot
 
 
+def test_alloc_conserves_pages_on_realloc():
+    """Re-allocating a slot that still holds live mappings must return the
+    old pages to the free list first — zeroing the table row alone would
+    silently leak them (free_pages + mapped == n_pages - 1 must hold through
+    any alloc/free ordering regression)."""
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    cache = PagedCache(model, n_slots=2, pages_per_slot=4, page_size=8,
+                       kv_dtype="dense")
+    total = cache.n_pages - 1
+
+    def mapped():
+        return sum(cache.mapped_pages(s) for s in range(cache.n_slots))
+
+    cache.alloc(0, 17)  # 3 pages
+    assert cache.free_pages + mapped() == total
+    cache.alloc(0, 9)  # re-alloc WITHOUT free: old 3 pages must come back
+    assert cache.mapped_pages(0) == 2
+    assert cache.free_pages + mapped() == total
+    # the recycled low ids are handed out again (freed pages weren't lost)
+    cache.alloc(1, 32)
+    assert cache.free_pages + mapped() == total
+    assert cache.free_pages == total - 2 - 4
+    cache.free(0)
+    cache.free(1)
+    assert cache.free_pages == total
+
+
 def test_paged_cache_fp4_bytes():
     cfg = get_reduced_config("qwen3-1.7b")
     model = build_model(cfg)

@@ -172,6 +172,124 @@ def test_spec_rejects_non_paged_families():
 
 
 # ---------------------------------------------------------------------------
+# page-reservation contract: spec decode never maps beyond the admission
+# reservation, so a pool sized exactly to its reservations cannot OOM
+# ---------------------------------------------------------------------------
+
+
+def test_spec_full_pool_decode_to_budget(qwen_setup):
+    """Regression: with the pool sized EXACTLY to the admitted reservations
+    (no spare pages at all) and prompt+max_new == max_len, speculative decode
+    must run to the token budget.  The old ``ensure(slot, p0 + k + 1)``
+    mapped pages past the reservation on demand, popping unreserved pages —
+    under this full pool that raised RuntimeError("out of pages") mid-flight
+    despite the scheduler's reserved-up-front contract."""
+    cfg, model, params = qwen_setup
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+    # n_slots=2, page_size=4, prompt=8 + max_new=8 == max_len=16 → exactly
+    # 4 pages per slot; pool = scratch + 2×4 pages, i.e. zero slack
+    ecfg = EngineConfig(n_slots=2, max_len=16, page_size=4, kv_dtype="mxfp4",
+                        prefill_chunk=4, n_pages=1 + 2 * 4,
+                        spec=SpecConfig(k=3, proposer="self"))
+    eng = Engine(model, params, ecfg)
+    handles = [eng.submit(p, 8) for p in prompts]
+    reserved = eng.cache.pages_needed(16)
+    while eng.sched.pending:  # drain, asserting the reservation invariant
+        eng.step()
+        for req in eng.sched.active.values():
+            assert eng.cache.mapped_pages(req.slot) <= reserved
+    assert all(len(h.tokens) == 8 for h in handles)
+    assert all(h.acceptance_rate() == 1.0 for h in handles)
+    assert eng.cache.free_pages == eng.cache.n_pages - 1
+    # parity: the same tight pool, non-speculative
+    base = Engine(model, params, dataclasses.replace(ecfg, spec=None))
+    bh = [base.submit(p, 8) for p in prompts]
+    base.drain()
+    assert [h.tokens for h in handles] == [h.tokens for h in bh]
+
+
+# ---------------------------------------------------------------------------
+# acceptance accounting on truncated bursts
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_burst_accounting_budget(qwen_setup):
+    """A request that hits max_new mid-burst counts only drafts at emittable
+    positions: the self-proposer oracle must report acceptance EXACTLY 1.0
+    (the old ``+= k`` over-count diluted it with never-emittable drafts
+    whose beyond-budget context is scratch garbage by design)."""
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(9,))
+    # max_new=4, k=4: prefill emits token 1, the single verify burst may only
+    # emit 3 of its up-to-5 tokens → truncation guaranteed
+    _, hs = _run(model, params, prompts, max_new=4,
+                 spec=SpecConfig(k=4, proposer="self"))
+    h = hs[0]
+    assert len(h.tokens) == 4 and h.finish_reason == "max_tokens"
+    assert h.draft_proposed == 3  # only the emittable drafts
+    assert h.draft_accepted == 3
+    assert h.acceptance_rate() == 1.0
+
+
+def test_truncated_burst_accounting_eos(qwen_setup):
+    """EOS inside an accepted burst likewise stops the count at the emitted
+    prefix — acceptance stays exactly 1.0 for the self oracle."""
+    cfg, model, params = qwen_setup
+    prompt = _prompts(cfg, lens=(9,), seed=6)[0]
+    ref = greedy_generate(model, params, jnp.asarray(prompt)[None],
+                          max_new=8, max_len=24)[0].tolist()
+    # an eos value first reached during the decode phase (index ≥ 1), so at
+    # least one verify burst runs before emission stops on it
+    eos = next(t for i, t in enumerate(ref[1:], 1) if t not in ref[:i])
+    _, hs = _run(model, params, [prompt], max_new=8, eos_id=eos,
+                 spec=SpecConfig(k=3, proposer="self"))
+    h = hs[0]
+    assert h.finish_reason == "eos" and h.tokens[-1] == eos
+    assert h.draft_proposed > 0
+    assert h.draft_accepted == h.draft_proposed
+    assert h.acceptance_rate() == 1.0
+
+
+def test_rejected_burst_counts_all_drafts(qwen_setup):
+    """A burst that ends by REJECTION (not EOS/budget) counts all k drafts
+    as proposed — the rejected draft's unreached successors were honestly
+    scored, and capping them at the emitted prefix would bias acceptance
+    upward.  An always-wrong proposer must report acceptance exactly 0.0
+    with k proposed per full burst, while staying token-exact (any-proposer
+    exactness)."""
+    from repro.serve.spec.proposers import Proposer, register_proposer
+
+    cfg, model, params = qwen_setup
+    prompts = _prompts(cfg, lens=(9,))
+    max_new, k = 5, 3
+    _, base = _run(model, params, prompts, max_new=max_new)
+    ref = base[0].tokens
+
+    @register_proposer("_always_wrong")
+    class AlwaysWrong(Proposer):
+        def propose(self, decoding):
+            drafts = np.zeros((self.engine.config.n_slots, self.spec.k),
+                              np.int32)
+            for r in decoding:
+                # first draft != the token the engine will emit next
+                drafts[r.slot, :] = (ref[len(r.tokens)] + 1) % cfg.vocab_size
+            return drafts
+
+    _, hs = _run(model, params, prompts, max_new=max_new,
+                 spec=SpecConfig(k=k, proposer="_always_wrong"))
+    h = hs[0]
+    assert h.tokens == ref  # rejection never changes the emitted stream
+    # every burst emits exactly 1 correction token: 3 full bursts (k proposed
+    # each) + the final budget-stopped burst (1 emittable position)
+    assert h.decode_calls == max_new - 1
+    assert h.draft_proposed == k * (max_new - 2) + 1
+    assert h.draft_accepted == 0
+    assert h.acceptance_rate() == 0.0
+
+
+# ---------------------------------------------------------------------------
 # rollback invariants: monotone logical lengths, page reuse
 # ---------------------------------------------------------------------------
 
