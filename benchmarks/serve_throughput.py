@@ -31,6 +31,18 @@ CPU wall-clock caveat: the paged kernel runs in Pallas *interpret* mode here,
 so its tok/s is a correctness-path number; the bytes model is the hardware
 claim (the kernel's blocking moves 4.25-bit payload instead of bf16 KV).
 
+Latency / pool / quantization-health numbers come from the engine's own
+telemetry (``repro.serve.telemetry``): the benchmark enables a metrics
+registry + tracer per configuration, resets it after warmup, and reads
+TTFT/TPOT/queue-wait percentiles, tick wall-times, pool occupancy peaks and
+kv_pack clip/scale gauges out of the final snapshot — it no longer re-derives
+them from request objects.  ``--metrics-out`` streams the registry snapshots
+of the primary (mxfp4/paged) run as JSON-lines.
+
+The report is also persisted as a schema-versioned baseline:
+``BENCH_serve.json`` at the repo root (``telemetry.schema.BENCH_SCHEMA``),
+validated before writing, so the perf trajectory is tracked across PRs.
+
 ``run()`` adapts the same numbers to the ``benchmarks.run`` CSV driver.
 """
 
@@ -38,11 +50,16 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_PATH = REPO_ROOT / "BENCH_serve.json"
 
 
 def _build(arch: str, reduced: bool):
@@ -112,10 +129,12 @@ def prefill_kv_bytes_per_chunk(cache, backend: str) -> int:
 
 def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
           max_new: int = 8, n_slots: int = 4, verify_parity: bool = True,
-          spec_k: int = 3, spec_proposer: str = "self") -> dict:
+          spec_k: int = 3, spec_proposer: str = "self",
+          metrics_out: str | None = None) -> dict:
     from repro.launch.serve_engine import run_workload
     from repro.serve import Engine, EngineConfig, SpecConfig
     from repro.serve.spec import aggregate_stats
+    from repro.serve.telemetry import TelemetryConfig
     from repro.train.serve import greedy_generate
 
     cfg, model, params = _build(arch, reduced)
@@ -124,27 +143,58 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
                     "n_requests": n_requests, "max_new": max_new,
                     "n_slots": n_slots}
 
-    def run_config(kv, backend, spec=None):
+    def run_config(kv, backend, spec=None, primary=False):
+        # the primary (mxfp4/paged) configuration streams its registry
+        # snapshots and samples pool quantization health every tick; the
+        # others keep the in-memory registry only (NullSink)
+        tcfg = TelemetryConfig(
+            metrics_path=metrics_out if primary else None,
+            emit_every_ticks=5 if primary and metrics_out else 0,
+            quant_stride=1 if primary else 0)
         eng = Engine(model, params, EngineConfig(
             n_slots=n_slots, max_len=64, page_size=16, kv_dtype=kv,
-            prefill_chunk=16, decode_backend=backend, spec=spec))
-        # warmup: compile the step shapes outside the timed region
+            prefill_chunk=16, decode_backend=backend, spec=spec,
+            telemetry=tcfg))
+        # warmup: compile the step shapes outside the timed region, then drop
+        # the warmup traffic from the registry (schema survives the reset)
         eng.submit(workload[0][1], 2, arrival_time=0.0)
         eng.drain()
         eng.completed.clear()
+        eng.telemetry.reset(eng)
 
         t0 = time.perf_counter()
         done, _ = run_workload(eng, workload, verbose=False)
         wall = time.perf_counter() - t0
         toks = sum(len(r.tokens) for r in done)
         agg = aggregate_stats(done)
+        snap = eng.telemetry.finalize()
+        g = snap["gauges"]
+
+        def rnd(v, nd=4):
+            return None if v is None else round(v, nd)
+
+        def hp(name, q, nd=4):  # empty histograms summarize without quantiles
+            return rnd(snap["histograms"][name].get(q), nd)
+
         stats = {
             "tokens_per_sec": round(toks / wall, 2),
             "wall_sec": round(wall, 3),
-            "latency_p50_s": round(_pct([r.latency() for r in done], 0.5), 4),
-            "latency_p95_s": round(_pct([r.latency() for r in done], 0.95), 4),
-            "ttft_p50_s": round(_pct([r.ttft() for r in done], 0.5), 4),
-            "ttft_p95_s": round(_pct([r.ttft() for r in done], 0.95), 4),
+            # virtual-clock latencies, derived by the request tracer
+            "latency_p50_s": hp("request_latency_s", "p50"),
+            "latency_p95_s": hp("request_latency_s", "p95"),
+            "ttft_p50_s": hp("ttft_s", "p50"),
+            "ttft_p95_s": hp("ttft_s", "p95"),
+            "tpot_p50_s": hp("tpot_s", "p50"),
+            "tpot_p95_s": hp("tpot_s", "p95"),
+            "queue_wait_p50_s": hp("queue_wait_s", "p50"),
+            # real wall time per tick section
+            "decode_tick_p50_s": hp("decode_tick_s", "p50", 6),
+            "decode_tick_p95_s": hp("decode_tick_s", "p95", 6),
+            "verify_tick_p50_s": hp("verify_tick_s", "p50", 6),
+            "prefill_tick_p50_s": hp("prefill_tick_s", "p50", 6),
+            # pool pressure over the run
+            "pool_occupancy_peak": rnd(g["pool_occupancy_peak"]),
+            "free_page_watermark": g["pool_pages_free_watermark"],
             "tokens_per_decode_call": agg["tokens_per_decode_call"],
             "acceptance_rate": agg["acceptance_rate"],
             "cache_bytes": eng.cache_bytes(),
@@ -155,13 +205,24 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
             "prefill_kv_bytes_per_chunk":
             prefill_kv_bytes_per_chunk(eng.cache, backend) if eng.paged else 0,
         }
+        if primary and snap["counters"]["quant_health_samples"]:
+            stats["quant_health"] = {
+                "clip_fraction_k": rnd(g["kv_clip_fraction_k"], 6),
+                "clip_fraction_v": rnd(g["kv_clip_fraction_v"], 6),
+                "zero_fraction_k": rnd(g["kv_zero_fraction_k"], 6),
+                "scale_hist_nonzero_bins":
+                snap["binned"]["kv_scale_hist_k"]["nonzero_bins"],
+                "scale_code_min": snap["binned"]["kv_scale_hist_k"]["bin_min"],
+                "scale_code_max": snap["binned"]["kv_scale_hist_k"]["bin_max"],
+            }
         return stats, {r.rid: list(r.tokens) for r in done}
 
     outputs: dict = {}
     report["decode_backends"] = {}
     for kv, backend in (("dense", "paged"), ("dense", "gather"),
                         ("mxfp4", "paged"), ("mxfp4", "gather")):
-        stats, outputs[(kv, backend)] = run_config(kv, backend)
+        stats, outputs[(kv, backend)] = run_config(
+            kv, backend, primary=(kv == "mxfp4" and backend == "paged"))
         if backend == "paged":  # primary numbers, keyed by cache dtype
             report[kv] = stats
         report["decode_backends"][f"{kv}/{backend}"] = {
@@ -251,12 +312,96 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
     return report
 
 
+def make_bench_baseline(rep: dict) -> dict:
+    """Benchmark report → the schema-versioned ``BENCH_serve.json`` document
+    (``telemetry.schema.BENCH_SCHEMA``).  Null-able fields go null on
+    dense-slot families / configurations with nothing to measure."""
+    from repro.serve.telemetry.schema import BENCH_SCHEMA
+
+    m, d, db = rep["mxfp4"], rep["dense"], rep["decode_backends"]
+    sp_m = rep.get("spec", {}).get("mxfp4")
+    qh = m.get("quant_health", {})
+    pf = rep.get("prefill", {}).get("kv_bytes_per_chunk_mxfp4", {})
+    return {
+        "schema": BENCH_SCHEMA,
+        "arch": rep["arch"],
+        "family": rep["family"],
+        "config": {"n_requests": rep["n_requests"], "max_new": rep["max_new"],
+                   "n_slots": rep["n_slots"]},
+        "throughput": {
+            "mxfp4_paged_tok_per_s": m["tokens_per_sec"],
+            "dense_paged_tok_per_s": d["tokens_per_sec"],
+            "mxfp4_gather_tok_per_s": db["mxfp4/gather"]["tokens_per_sec"],
+        },
+        "latency": {
+            "ttft_p50_s": m["ttft_p50_s"], "ttft_p95_s": m["ttft_p95_s"],
+            "tpot_p50_s": m["tpot_p50_s"], "tpot_p95_s": m["tpot_p95_s"],
+            "latency_p50_s": m["latency_p50_s"],
+            "latency_p95_s": m["latency_p95_s"],
+            "queue_wait_p50_s": m["queue_wait_p50_s"],
+        },
+        "tick": {
+            "decode_p50_s": m["decode_tick_p50_s"],
+            "decode_p95_s": m["decode_tick_p95_s"],
+            "prefill_p50_s": m["prefill_tick_p50_s"],
+        },
+        "kv": {
+            "cache_bytes_dense": d["cache_bytes"],
+            "cache_bytes_mxfp4": m["cache_bytes"],
+            "cache_ratio": rep["cache_ratio"],
+            "bits_per_elem_mxfp4": m["bits_per_kv_elem"],
+            "decode_bytes_ratio_gather_over_paged":
+            rep["decode_bytes_ratio_gather_over_paged"],
+            "prefill_bytes_ratio_gather_over_paged":
+            pf.get("ratio_gather_over_paged"),
+        },
+        "pool": {
+            "occupancy_peak": m["pool_occupancy_peak"] or 0,
+            "free_page_watermark": m["free_page_watermark"] or 0,
+        },
+        "spec": {
+            "k": rep["spec"]["k"],
+            "proposer": rep["spec"]["proposer"],
+            "acceptance_rate": sp_m["acceptance_rate"] if sp_m else None,
+            "tokens_per_decode_call":
+            sp_m["tokens_per_decode_call"] if sp_m else None,
+        },
+        "quant_health": {
+            "clip_fraction_k": qh.get("clip_fraction_k"),
+            "clip_fraction_v": qh.get("clip_fraction_v"),
+            "zero_fraction_k": qh.get("zero_fraction_k"),
+            "scale_hist_nonzero_bins": qh.get("scale_hist_nonzero_bins"),
+            "scale_code_min": qh.get("scale_code_min"),
+            "scale_code_max": qh.get("scale_code_max"),
+        },
+    }
+
+
+def write_bench(rep: dict, path=BENCH_PATH) -> dict:
+    """Validate + persist the baseline; raises before writing anything if
+    the document doesn't conform to BENCH_SCHEMA."""
+    from repro.serve.telemetry.schema import validate_bench
+
+    doc = make_bench_baseline(rep)
+    errors = validate_bench(doc)
+    if errors:
+        raise ValueError("refusing to write invalid BENCH_serve.json:\n  "
+                         + "\n  ".join(errors))
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    return doc
+
+
 def run():
-    """benchmarks.run driver hook → (name, us_per_call, derived) rows."""
+    """benchmarks.run driver hook → (name, us_per_call, derived) rows.
+    Also persists the BENCH_serve.json baseline."""
     rep = bench()
+    write_bench(rep)
     per_tok = max(rep["n_requests"] * rep["max_new"], 1)
     db = rep["decode_backends"]
     rows = [
+        ("serve_bench_baseline", 0.0, str(BENCH_PATH)),
         ("serve_fp4_tok_per_s", rep["mxfp4"]["wall_sec"] * 1e6 / per_tok,
          f"{rep['mxfp4']['tokens_per_sec']}tok/s"),
         ("serve_dense_tok_per_s", rep["dense"]["wall_sec"] * 1e6 / per_tok,
@@ -308,16 +453,49 @@ def main():
                     help="proposer for the spec A/B ('self' = parity oracle)")
     ap.add_argument("--smoke", action="store_true",
                     help="small fixed workload + assert the paged-kernel "
-                         "decode metrics, spec-mode parity, and "
-                         "tokens-per-decode-call > 1 (CI)")
+                         "decode metrics, spec-mode parity, "
+                         "tokens-per-decode-call > 1, and the telemetry "
+                         "stream/baseline artifacts (CI)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream the primary run's registry snapshots as "
+                         "JSON-lines to this path (smoke default: "
+                         "metrics_serve.jsonl next to BENCH_serve.json)")
+    ap.add_argument("--bench-out", default=str(BENCH_PATH),
+                    help="where to write the schema-versioned benchmark "
+                         "baseline ('' to skip)")
     args = ap.parse_args()
     if args.smoke:
         args.reduced, args.requests, args.max_new, args.slots = True, 4, 4, 2
+        if args.metrics_out is None:
+            args.metrics_out = str(REPO_ROOT / "metrics_serve.jsonl")
     rep = bench(args.arch, args.reduced, args.requests, args.max_new,
                 args.slots, verify_parity=not args.no_parity,
-                spec_k=args.spec_k, spec_proposer=args.spec_proposer)
+                spec_k=args.spec_k, spec_proposer=args.spec_proposer,
+                metrics_out=args.metrics_out)
     print(json.dumps(rep, indent=2))
+    if args.bench_out:
+        write_bench(rep, args.bench_out)
+        print(f"wrote {args.bench_out}", file=sys.stderr)
     if args.smoke:
+        from repro.serve.telemetry.schema import (validate_bench_file,
+                                                  validate_metrics_file)
+        # the telemetry stream must exist, parse, and carry real signal
+        n_snaps = validate_metrics_file(args.metrics_out)
+        assert n_snaps >= 1, "empty metrics stream"
+        m = rep["mxfp4"]
+        assert m["pool_occupancy_peak"] > 0, "pool occupancy never nonzero"
+        assert m["decode_tick_p50_s"] > 0, "no decode tick latency recorded"
+        assert m["ttft_p50_s"] > 0 and m["ttft_p95_s"] > 0
+        assert m["tpot_p50_s"] is not None and m["tpot_p50_s"] > 0
+        assert m["latency_p50_s"] > 0
+        qh = m.get("quant_health")
+        assert qh is not None, "quant health never sampled on the mxfp4 pool"
+        assert qh["scale_hist_nonzero_bins"] >= 1
+        assert qh["clip_fraction_k"] is not None and qh["clip_fraction_k"] >= 0
+        # the persisted baseline must round-trip its schema validator
+        doc = validate_bench_file(args.bench_out)
+        assert doc["spec"]["acceptance_rate"] is None or \
+            0.0 <= doc["spec"]["acceptance_rate"] <= 1.0
         for key in ("mxfp4/paged", "mxfp4/gather", "dense/paged"):
             assert key in rep["decode_backends"], f"missing decode metrics {key}"
             assert rep["decode_backends"][key]["decode_kv_bytes_per_step"] > 0

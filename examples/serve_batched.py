@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.models import build_model
-from repro.serve import Engine, EngineConfig, SpecConfig
+from repro.serve import Engine, EngineConfig, SpecConfig, TelemetryConfig
 from repro.serve.spec import aggregate_stats
 from repro.train.serve import greedy_generate
 
@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--spec", default=None, choices=["self", "ngram"],
                     help="speculative decoding proposer (paged families)")
     ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream telemetry snapshots as JSON-lines here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request span traces as JSON-lines here")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -60,7 +64,10 @@ def main():
             if args.spec is not None else None)
     engine = Engine(model, params, EngineConfig(
         n_slots=args.slots, max_len=48, page_size=8, kv_dtype=args.kv,
-        prefill_chunk=8, spec=spec))
+        prefill_chunk=8, spec=spec,
+        telemetry=TelemetryConfig(metrics_path=args.metrics_out,
+                                  trace_path=args.trace_out,
+                                  quant_stride=4)))
 
     # mixed prompt lengths, arrivals staggered over the first steps
     prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(6, 31)))
@@ -84,7 +91,14 @@ def main():
           f"{len(handles)} requests ({min(p.size for p in prompts)}–"
           f"{max(p.size for p in prompts)} prompt tokens) → {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s)")
-    print(f"cache bytes: {engine.cache_bytes():,}")
+    # the engine's own telemetry replaces hand-rolled stats: queue depths,
+    # TTFT/TPOT percentiles, pool occupancy and FP4 clip/scale health all
+    # came along for free with the run
+    engine.telemetry.finalize()
+    print(engine.telemetry.summary())
+    for label, path in (("metrics", args.metrics_out), ("traces", args.trace_out)):
+        if path:
+            print(f"{label} → {path}")
     if spec is not None:
         agg = aggregate_stats(handles)
         print(f"spec[{args.spec}, k={args.spec_k}]: "

@@ -29,11 +29,26 @@ from repro.core import formats as F
 
 GROUP = 32
 _E2M1_MAX = 6.0
+# magnitude index of ±6.0 — a quantized element sitting on this code was at
+# (or clipped to) the top of the E2M1 grid; the fraction of such codes in the
+# pool is the FP4 saturation / clip-rate gauge (telemetry.quant_health)
+E2M1_SAT_IDX = 7
 
 
 def _exp2i(e: jnp.ndarray) -> jnp.ndarray:
     bits = (e.astype(jnp.int32) + 127) << 23
     return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def split_nibbles(packed: jnp.ndarray) -> jnp.ndarray:
+    """Packed bytes [..., K/2] u8 → nibble codes [..., K] u8 (high nibble
+    first — the pack order of ``_kv_quant_pack_kernel``).  Shared by
+    :func:`unpack_dequant` and the pool-health reductions
+    (``serve.telemetry.quant_health``), which inspect codes without
+    dequantizing."""
+    *lead, kh = packed.shape
+    return jnp.stack([(packed >> 4) & 0xF, packed & 0xF],
+                     axis=-1).reshape(*lead, kh * 2)
 
 
 def unpack_dequant(packed: jnp.ndarray, scale_codes: jnp.ndarray,
@@ -45,7 +60,7 @@ def unpack_dequant(packed: jnp.ndarray, scale_codes: jnp.ndarray,
     VMEM-resident KV tile."""
     *lead, kh = packed.shape
     k = kh * 2
-    nib = jnp.stack([(packed >> 4) & 0xF, packed & 0xF], axis=-1).reshape(*lead, k)
+    nib = split_nibbles(packed)
     idx = (nib & 7).astype(jnp.float32)
     mag_norm = _exp2i(jnp.floor((idx - 2.0) / 2.0)) * (1.0 + 0.5 * (idx % 2.0))
     mag = jnp.where(idx >= 2.0, mag_norm, idx * 0.5)

@@ -12,6 +12,12 @@ so queueing behaviour is faithful even though steps are synchronous.
 (paged families; ``--draft-arch`` selects the draft model for the ``draft``
 proposer) and reports tokens-per-verify-call and draft acceptance;
 ``--temperature/--top-k/--top-p/--sample-seed`` enable per-request sampling.
+
+Observability: ``--metrics-out m.jsonl`` streams registry snapshots as
+JSON-lines, ``--trace-out t.jsonl`` writes one line per retired request
+(spans + derived TTFT/TPOT), ``--quant-stride N`` samples the MXFP4 pool's
+clip/scale health every N ticks, and the run ends with the telemetry
+summary table (see ``serve/README.md#observability``).
 """
 
 from __future__ import annotations
@@ -27,7 +33,8 @@ from repro.configs import get_config, get_reduced_config
 from repro.distributed.context import activate_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
-from repro.serve import Engine, EngineConfig, SamplingParams, SpecConfig
+from repro.serve import (Engine, EngineConfig, SamplingParams, SpecConfig,
+                         TelemetryConfig)
 from repro.serve.spec import aggregate_stats
 
 
@@ -109,6 +116,14 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--sample-seed", type=int, default=0)
+    # observability (repro.serve.telemetry)
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream registry snapshots as JSON-lines here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request span traces as JSON-lines here")
+    ap.add_argument("--quant-stride", type=int, default=0,
+                    help="sample MXFP4 pool clip/scale health every N ticks "
+                         "(0 = off)")
     args = ap.parse_args()
 
     cfg = (get_reduced_config(args.arch) if args.reduced else get_config(args.arch))
@@ -131,32 +146,35 @@ def main():
         ap.error("--top-k/--top-p/--sample-seed require --temperature > 0 "
                  "(temperature 0 is greedy argmax and ignores them)")
 
+    telemetry = TelemetryConfig(metrics_path=args.metrics_out,
+                                trace_path=args.trace_out,
+                                quant_stride=args.quant_stride)
     with activate_mesh(make_local_mesh()):
         engine = Engine(model, params, EngineConfig(
             n_slots=args.slots, max_len=args.max_len, page_size=args.page_size,
             kv_dtype=args.kv, prefill_chunk=args.prefill_chunk, method=args.method,
-            decode_backend=args.decode_backend, spec=spec))
+            decode_backend=args.decode_backend, spec=spec, telemetry=telemetry))
         done, elapsed = run_workload(engine, workload, extra=make_extra(cfg, key),
                                      sampling=sampling)
 
+    # final telemetry summary table (the registry + tracer collected every
+    # number the old hand-rolled prints derived from request objects)
     total_tokens = sum(len(r.tokens) for r in done)
-    lats = sorted(r.latency() for r in done)
-    ttfts = sorted(r.ttft() for r in done)
-    pct = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
+    engine.telemetry.finalize()
     print(f"\n{cfg.name} [{cfg.family}] kv={args.kv if engine.paged else 'dense-slots'}"
           f" decode={engine.decode_backend} slots={args.slots}"
           + (f" spec={args.spec}(k={args.spec_k})" if spec else ""))
     print(f"  {len(done)} requests, {total_tokens} tokens in {elapsed:.2f}s wall "
           f"→ {total_tokens / elapsed:.1f} tok/s")
-    print(f"  latency p50={pct(lats, 0.5):.3f}s p95={pct(lats, 0.95):.3f}s | "
-          f"ttft p50={pct(ttfts, 0.5):.3f}s p95={pct(ttfts, 0.95):.3f}s (virtual)")
-    print(f"  cache bytes: {engine.cache_bytes():,}"
-          + (f" ({engine.cache.bits_per_element():.2f} bits/elem)" if engine.paged else ""))
+    print(engine.telemetry.summary())
     if spec is not None:
         agg = aggregate_stats(done)
         print(f"  spec: {agg['tokens_per_decode_call']} tok/verify-call, "
               f"acceptance {agg['acceptance_rate']} "
               f"({agg['drafts_accepted']}/{agg['drafts_proposed']} drafts)")
+    for label, path in (("metrics", args.metrics_out), ("traces", args.trace_out)):
+        if path:
+            print(f"  {label} → {path}")
 
 
 if __name__ == "__main__":

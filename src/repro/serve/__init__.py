@@ -1,11 +1,12 @@
 """Continuous-batching serving engine with a paged (optionally MXFP4) KV
-cache, per-request sampling, and speculative decoding."""
+cache, per-request sampling, speculative decoding, and built-in telemetry."""
 
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.paged_cache import DenseSlotCache, PagedCache, PagedKV
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec import SpecConfig
+from repro.serve.telemetry import EngineTelemetry, MetricsRegistry, TelemetryConfig
 
 __all__ = [
     "Engine",
@@ -18,4 +19,7 @@ __all__ = [
     "Scheduler",
     "SamplingParams",
     "SpecConfig",
+    "TelemetryConfig",
+    "EngineTelemetry",
+    "MetricsRegistry",
 ]

@@ -79,7 +79,9 @@ from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec.config import SpecConfig
 from repro.serve.spec.proposers import build_proposer
 from repro.serve.spec.verify import accept_tokens
-from repro.serve.steps import build_paged_steps, marshal_prefill_batch
+from repro.serve.steps import (build_paged_steps, jit_cache_size,
+                               marshal_prefill_batch)
+from repro.serve.telemetry import EngineTelemetry, TelemetryConfig
 from repro.train.serve import make_chunk_prefill_step, make_decode_step
 
 PAGED_FAMILIES = ("dense", "moe")
@@ -110,6 +112,11 @@ class EngineConfig:
     n_pages: int | None = None
     # speculative decoding (paged families only); None → plain decode
     spec: SpecConfig | None = None
+    # observability (serve.telemetry).  None → metrics + tracing still
+    # collected in-memory (host dicts, no sinks, no device sampling); set a
+    # TelemetryConfig to stream JSONL metrics / traces, expose Prometheus
+    # text, or sample pool quantization health at a tick stride.
+    telemetry: TelemetryConfig | None = None
 
 
 class Engine:
@@ -122,7 +129,9 @@ class Engine:
             raise ValueError(
                 f"speculative decoding needs a paged family (dense/moe), "
                 f"got {model.cfg.family!r}")
-        self.sched = Scheduler(cfg.n_slots, cfg.max_len, cfg.prefill_chunk)
+        self.telemetry = EngineTelemetry(cfg.telemetry)
+        self.sched = Scheduler(cfg.n_slots, cfg.max_len, cfg.prefill_chunk,
+                               tracer=self.telemetry.tracer)
         self.completed: list[Request] = []
         self._dtype = jnp.dtype(model.cfg.dtype)
         self.steps = 0
@@ -180,6 +189,7 @@ class Engine:
 
         self.proposer = (build_proposer(self, self.spec)
                          if self.spec is not None else None)
+        self.telemetry.attach(self)
 
     # ------------------------------------------------------------------ API
 
@@ -187,8 +197,10 @@ class Engine:
                arrival_time: float | None = None,
                sampling: SamplingParams | None = None) -> Request:
         now = time.monotonic() if arrival_time is None else arrival_time
-        return self.sched.submit(prompt, max_new, extra=extra, arrival_time=now,
-                                 sampling=sampling)
+        req = self.sched.submit(prompt, max_new, extra=extra, arrival_time=now,
+                                sampling=sampling)
+        self.telemetry.registry.counter("requests_submitted").inc()
+        return req
 
     def step(self, now: float | None = None) -> dict:
         """One scheduler tick: admit → chunked prefill → batched decode (or
@@ -196,6 +208,8 @@ class Engine:
         summary dict (counts) for driver loops."""
         now = time.monotonic() if now is None else now
         cfg = self.config
+        reg = self.telemetry.registry
+        t_tick = time.perf_counter()
 
         # -- admit ---------------------------------------------------------
         def can_admit(req: Request) -> bool:
@@ -211,26 +225,41 @@ class Engine:
                 self.cache.reset_slot(req.slot)
             if self.proposer is not None:
                 self.proposer.on_admit(req)
+            self.telemetry.tracer.event(req.rid, "admit", now)
+        reg.counter("requests_admitted").inc(len(admitted))
+        if self.sched.queue and self.sched.free_slots:
+            # a slot is free but the FIFO head didn't fit: page pressure
+            reg.counter("admission_blocked_pages").inc()
 
         # -- chunked prefill: ALL prefilling paged slots in one jitted call
         #    (gather oracle / dense slots: one per-slot call each) ----------
+        t0 = time.perf_counter()
+        did_prefill = False
         if self._prefill_all is not None:
             batch = self.sched.prefill_batch()
             if batch:
                 self._prefill_tick(batch, now)
+                did_prefill = True
         else:
             for req in self.sched.prefilling():
                 self._advance_prefill(req, now)
+                did_prefill = True
+        if did_prefill:
+            reg.histogram("prefill_tick_s").observe(time.perf_counter() - t0)
 
         # -- one batched decode/verify over all decoding slots ---------------
         decoding = self.sched.decoding()
         if decoding:
+            t0 = time.perf_counter()
             if self.spec is not None:
                 self._spec_tick(decoding, now)
+                reg.histogram("verify_tick_s").observe(time.perf_counter() - t0)
             else:
                 self._decode_tick(decoding, now)
+                reg.histogram("decode_tick_s").observe(time.perf_counter() - t0)
 
         self.steps += 1
+        self.telemetry.end_tick(self, now, time.perf_counter() - t_tick)
         return {"admitted": len(admitted), "prefilling": len(self.sched.prefilling()),
                 "decoding": len(self.sched.decoding()),
                 "queued": len(self.sched.queue), "step": self.steps}
@@ -245,6 +274,16 @@ class Engine:
 
     def cache_bytes(self) -> int:
         return self.cache.cache_bytes()
+
+    def compile_counts(self) -> dict[str, int]:
+        """Compiled-variant count per jitted step — the one-compile-per-shape
+        contract made observable (exported as ``jit_compiled_*`` gauges and
+        pinned by the telemetry no-recompile test)."""
+        if self.paged:
+            return self._steps.compile_counts()
+        return {"decode_all": jit_cache_size(self._decode_all),
+                "prefill_chunk": jit_cache_size(self._prefill_chunk),
+                "verify_all": 0, "prefill_all": 0}
 
     # ------------------------------------------------------------- internals
 
@@ -267,6 +306,9 @@ class Engine:
                 self.params, tokens, start, jnp.int32(req.slot),
                 self.cache.caches, req.extra)
         req.prefill_pos += tokens_np.shape[0]
+        self.telemetry.registry.counter("prefill_calls").inc()
+        self.telemetry.registry.counter("prompt_tokens_prefilled").inc(
+            int(tokens_np.shape[0]))
         return logits
 
     def _prefill_tick(self, batch, now: float) -> None:
@@ -283,6 +325,9 @@ class Engine:
             self.params, jnp.asarray(tokens), jnp.asarray(start),
             jnp.asarray(n_valid), self.cache.pool,
             jnp.asarray(self.cache.tables), jnp.asarray(mask))
+        reg = self.telemetry.registry
+        reg.counter("prefill_calls").inc()
+        reg.counter("prompt_tokens_prefilled").inc(int(sum(n for _, _, n in batch)))
         logits_np = None  # [B, V]; fetched only if some slot finished
         for req, pos, n in batch:
             req.prefill_pos = pos + n
@@ -296,6 +341,7 @@ class Engine:
                 req.tokens.append(tok)
                 req.first_token_time = now
                 req.state = RequestState.DECODE
+                self._record_first_token(req, now)
                 self._maybe_finish(req, now)
 
     def _advance_prefill(self, req: Request, now: float) -> None:
@@ -320,7 +366,16 @@ class Engine:
             req.tokens.append(tok)
             req.first_token_time = now
             req.state = RequestState.DECODE
+            self._record_first_token(req, now)
             self._maybe_finish(req, now)
+
+    def _record_first_token(self, req: Request, now: float) -> None:
+        """Prefill just produced the request's first token: trace the span
+        boundary and count the emission (it rides on a prefill call, so it
+        counts toward ``tokens_generated`` but NOT ``decode_tokens``)."""
+        self.telemetry.tracer.event(req.rid, "first_token", now)
+        self.telemetry.tracer.tokens(req.rid, now, 1)
+        self.telemetry.registry.counter("tokens_generated").inc()
 
     def _decode_tick(self, decoding: list[Request], now: float) -> None:
         B = self.config.n_slots
@@ -340,13 +395,18 @@ class Engine:
             logits, self.cache.caches = self._decode_all(
                 *args, self.cache.caches, jnp.asarray(mask))
         logits_np = np.asarray(logits, np.float32)
+        reg = self.telemetry.registry
+        reg.counter("decode_calls").inc()
         for req in decoding:
             tok = self._sample(req, logits_np[req.slot], len(req.tokens))
             if self.config.keep_logits:
                 req.logits_trace.append(logits_np[req.slot])
             req.tokens.append(tok)
             req.decode_calls += 1
+            self.telemetry.tracer.tokens(req.rid, now, 1)
             self._maybe_finish(req, now)
+        reg.counter("tokens_generated").inc(len(decoding))
+        reg.counter("decode_tokens").inc(len(decoding))
 
     def _spec_tick(self, decoding: list[Request], now: float) -> None:
         """Draft → one batched verify → accept/rollback.
@@ -390,6 +450,8 @@ class Engine:
             self.params, jnp.asarray(tokens), jnp.asarray(start),
             self.cache.pool, jnp.asarray(self.cache.tables), jnp.asarray(mask))
         logits_np = np.asarray(logits, np.float32)  # [B, k+1, V]
+        reg = self.telemetry.registry
+        reg.counter("verify_calls").inc()
 
         for req in decoding:
             base = len(req.tokens)
@@ -420,6 +482,11 @@ class Engine:
             proposed = min(n_emit if stopped else k, k)
             req.draft_proposed += proposed
             req.draft_accepted += min(n_acc, proposed)
+            reg.counter("tokens_generated").inc(n_emit)
+            reg.counter("decode_tokens").inc(n_emit)
+            reg.counter("drafts_proposed").inc(proposed)
+            reg.counter("drafts_accepted").inc(min(n_acc, proposed))
+            self.telemetry.tracer.tokens(req.rid, now, n_emit)
             self._maybe_finish(req, now)
             if not req.done:
                 # rollback is logical: the rejected suffix's positions are
@@ -427,6 +494,9 @@ class Engine:
                 # admission reservation and every position is rewritten
                 # before it is next read
                 self.proposer.on_accept(req)
+        if (total := reg.counter("drafts_proposed").value):
+            reg.gauge("spec_acceptance_rate").set(
+                reg.counter("drafts_accepted").value / total)
 
     def _maybe_finish(self, req: Request, now: float) -> None:
         eos = self.config.eos_id
@@ -436,9 +506,13 @@ class Engine:
         elif len(req.tokens) >= req.max_new:
             reason = "max_tokens"
         if reason is not None:
-            self.sched.retire(req, reason, now)
+            self.sched.retire(req, reason, now)  # fires the "retire" span
             if self.paged:
                 self.cache.free(req.slot)
             if self.proposer is not None:
                 self.proposer.on_retire(req)
             self.completed.append(req)
+            reg = self.telemetry.registry
+            reg.counter(f"requests_retired_{reason}").inc()
+            if (tpc := req.tokens_per_decode_call()) is not None:
+                reg.histogram("tokens_per_decode_call").observe(tpc)

@@ -224,6 +224,26 @@ class PagedCache:
         0 and truncate frees from the tail, so nonzero entries are a prefix)."""
         return int(np.count_nonzero(self.tables[slot]))
 
+    def mapped_total(self) -> int:
+        """Pages mapped across ALL slots.  Page conservation means
+        ``mapped_total() + free_pages == n_pages - 1`` (scratch excluded)."""
+        return int(np.count_nonzero(self.tables))
+
+    def occupancy(self) -> float:
+        """Mapped fraction of the allocatable pool (scratch page excluded) —
+        the telemetry ``pool_occupancy`` gauge."""
+        allocatable = self.n_pages - 1
+        return self.mapped_total() / allocatable if allocatable else 0.0
+
+    def page_mask(self) -> np.ndarray:
+        """[n_pages] bool — True where a slot maps the page.  The runtime
+        operand of the telemetry pool-health reduction (scratch page 0 is
+        never mapped, so it is never counted)."""
+        mask = np.zeros((self.n_pages,), bool)
+        ids = self.tables.reshape(-1)
+        mask[ids[ids > 0]] = True
+        return mask
+
     def ensure(self, slot: int, n_tokens: int) -> int:
         """Extend ``slot``'s mapping to cover ``n_tokens`` positions (no-op if
         already covered); returns pages added.  Allocator primitive: the

@@ -23,6 +23,7 @@ token-exact parity contracts bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -76,47 +77,80 @@ def filter_logits(logits: jnp.ndarray, sp: SamplingParams) -> jnp.ndarray:
     return l
 
 
-def row_key(seed: int, row, token_idx) -> jnp.ndarray:
+def row_key(seed, row, token_idx) -> jnp.ndarray:
     """Stateless per-token key: (request seed, batch row, generated-token
-    index) → PRNG key.  ``token_idx`` counts generated tokens from 0."""
+    index) → PRNG key.  ``token_idx`` counts generated tokens from 0.
+    ``seed`` may be a traced value — the compiled samplers pass it as a
+    runtime operand so distinct seeds share one executable."""
     return jax.random.fold_in(
         jax.random.fold_in(jax.random.PRNGKey(seed), row), token_idx)
 
 
-def sample_row(logits: jnp.ndarray, sp: SamplingParams, row, token_idx) -> jnp.ndarray:
+def sample_row(logits: jnp.ndarray, sp: SamplingParams, row, token_idx,
+               seed=None) -> jnp.ndarray:
     """One row's token draw ([V] logits → scalar int32).  Traceable; the
-    greedy branch resolves at trace time and never builds a key."""
+    greedy branch resolves at trace time and never builds a key.  ``seed``
+    overrides ``sp.seed`` (used to trace the seed as a runtime argument)."""
     if sp.greedy:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    key = row_key(sp.seed, row, token_idx)
+    key = row_key(sp.seed if seed is None else seed, row, token_idx)
     return jax.random.categorical(key, filter_logits(logits, sp)).astype(jnp.int32)
 
 
+# Compiled sampler cache, keyed by the DISTRIBUTION params only
+# (temperature, top_k, top_p).  The seed is a runtime operand of the traced
+# function — only these three change the computation graph, so a workload
+# where every request carries its own seed (the normal case: distinct seeds
+# decorrelate concurrent streams) still compiles exactly one sampler per
+# distribution shape instead of one per request.
+_COMPILED: dict[tuple, Any] = {}
+
+
+def _compiled_sampler(sp: SamplingParams):
+    dist = (sp.temperature, sp.top_k, sp.top_p)
+    if dist not in _COMPILED:
+        trace_sp = dataclasses.replace(sp, seed=0)  # seed unused at trace time
+        _COMPILED[dist] = jax.jit(
+            lambda logits, seed, t: sample_row(
+                logits, trace_sp, jnp.int32(0), t, seed=seed))
+    return _COMPILED[dist]
+
+
+def compiled_sampler_cache_size() -> int:
+    """Number of compiled (non-greedy) samplers held by the process — the
+    regression guard for the one-compile-per-distribution contract."""
+    return len(_COMPILED)
+
+
 class Sampler:
-    """Host-facing compiled sampler for one ``SamplingParams``.
+    """Host-facing sampler for one ``SamplingParams``.
 
     ``sampler(logits, token_idx)`` → python int.  Greedy short-circuits to
     ``np.argmax`` on the host (identical tie-breaking to ``jnp.argmax``:
     first maximum wins) so the default path costs no device dispatch.
+    Non-greedy draws share the per-distribution compiled function and feed
+    their own seed at call time.
     """
 
     def __init__(self, sp: SamplingParams):
         self.sp = sp
         if not sp.greedy:
-            self._fn = jax.jit(
-                lambda logits, t: sample_row(logits, sp, jnp.int32(0), t))
+            self._fn = _compiled_sampler(sp)
 
     def __call__(self, logits, token_idx: int) -> int:
         if self.sp.greedy:
             return int(np.argmax(np.asarray(logits)))
-        return int(self._fn(jnp.asarray(logits), jnp.int32(token_idx)))
+        return int(self._fn(jnp.asarray(logits), jnp.uint32(self.sp.seed),
+                            jnp.int32(token_idx)))
 
 
 _SAMPLERS: dict[SamplingParams, Sampler] = {}
 
 
 def get_sampler(sp: SamplingParams) -> Sampler:
-    """Process-wide sampler cache — one compile per distinct SamplingParams."""
+    """Process-wide sampler cache.  Sampler objects are cheap host wrappers
+    (one per SamplingParams); the expensive compiled function behind them is
+    shared per (temperature, top_k, top_p)."""
     if sp not in _SAMPLERS:
         _SAMPLERS[sp] = Sampler(sp)
     return _SAMPLERS[sp]

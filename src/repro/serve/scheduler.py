@@ -94,11 +94,13 @@ class Scheduler:
     to the cache backend (page availability in paged mode, always-true for
     dense slots)."""
 
-    def __init__(self, n_slots: int, max_len: int, prefill_chunk: int = 16):
+    def __init__(self, n_slots: int, max_len: int, prefill_chunk: int = 16,
+                 tracer: Any = None):
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         self.n_slots, self.max_len = n_slots, max_len
         self.prefill_chunk = prefill_chunk
+        self.tracer = tracer  # telemetry.Tracer | None — submit/retire spans
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self.free_slots = deque(range(n_slots))
@@ -117,6 +119,8 @@ class Scheduler:
         req = Request(rid=next(self._ids), prompt=prompt, max_new=max_new,
                       extra=extra, sampling=sampling, arrival_time=arrival_time)
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.event(req.rid, "submit", arrival_time)
         return req
 
     # -- per-step decisions -------------------------------------------------
@@ -165,6 +169,8 @@ class Scheduler:
         slot = req.slot
         del self.active[slot]
         self.free_slots.append(slot)
+        if self.tracer is not None:
+            self.tracer.event(req.rid, "retire", now)
         return slot
 
     @property

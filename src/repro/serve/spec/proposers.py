@@ -112,6 +112,7 @@ def _draft_loop(engine, decoding, k, *, steps, pool_owner, params, tables):
             tok = engine._sample(r, logits_np[r.slot], len(r.tokens) + j)
             drafts[r.slot, j] = tok
             cur[r.slot, 0] = tok
+    engine.telemetry.registry.counter("draft_decode_calls").inc(k)
     return drafts
 
 
@@ -254,6 +255,8 @@ class DraftModelProposer(Proposer):
                     _, self.cache.pool = self._steps.prefill_chunk(
                         self.params, toks, jnp.int32(have), table_row,
                         self.cache.pool)
+                    self.engine.telemetry.registry.counter(
+                        "draft_prefill_calls").inc()
                     have += step
                 self.synced[r.slot] = have
             return
@@ -274,6 +277,7 @@ class DraftModelProposer(Proposer):
                 self.params, jnp.asarray(tokens), jnp.asarray(start),
                 jnp.asarray(n_valid), self.cache.pool,
                 jnp.asarray(self.cache.tables), jnp.asarray(mask))
+            self.engine.telemetry.registry.counter("draft_prefill_calls").inc()
             for r in behind:
                 self.synced[r.slot] = min(self.synced[r.slot] + n_valid[r.slot],
                                           targets[r.slot])

@@ -82,6 +82,24 @@ class PagedSteps(NamedTuple):
     #   -> (last-valid-token logits [B,V], pool); None on the gather backend
     prefill_all: Callable | None
 
+    def compile_counts(self) -> dict[str, int]:
+        """Compiled-variant count per step function — the engine's
+        one-compile-per-shape contract made observable (telemetry exports
+        these as ``jit_compiled_*`` gauges; a compile storm shows up as a
+        count > 1 on a fixed-shape step)."""
+        return {name: jit_cache_size(fn) for name, fn in zip(self._fields, self)}
+
+
+def jit_cache_size(fn) -> int:
+    """Number of compiled variants a ``jax.jit`` callable holds (0 for None
+    or when the private counter is unavailable on this jax version)."""
+    if fn is None:
+        return 0
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        return 0
+
 
 def build_paged_steps(model: Model, *, method: str, page_size: int,
                       n_layers: int, decode_backend: str = "paged") -> PagedSteps:

@@ -1,0 +1,166 @@
+"""Schema versioning + validation for persisted telemetry artifacts.
+
+Two documents leave the process:
+
+* the **metrics stream** — JSON-lines of registry snapshots
+  (``registry.METRICS_SCHEMA``), one object per emit,
+* the **benchmark baseline** — ``BENCH_serve.json`` at the repo root
+  (``BENCH_SCHEMA``), written by ``benchmarks/serve_throughput.py`` so the
+  perf trajectory is tracked across PRs.
+
+Validators are hand-rolled (no jsonschema dependency) and return a list of
+human-readable error strings — empty means valid.  CI runs
+``validate_bench_file`` against the smoke artifact; the schema-stability
+test pins the metric catalog against golden name sets.
+"""
+
+from __future__ import annotations
+
+import json
+import numbers
+
+from repro.serve.telemetry.registry import METRICS_SCHEMA
+
+BENCH_SCHEMA = "repro.bench_serve/v1"
+
+_NUM = numbers.Real
+
+
+def _check(errors: list, doc: dict, path: str, spec: dict) -> None:
+    for key, want in spec.items():
+        if key not in doc:
+            errors.append(f"missing {path}{key}")
+            continue
+        v = doc[key]
+        if isinstance(want, dict):
+            if not isinstance(v, dict):
+                errors.append(f"{path}{key}: expected object, got {type(v).__name__}")
+            else:
+                _check(errors, v, f"{path}{key}.", want)
+        elif want is _NUM:
+            if not isinstance(v, _NUM) or isinstance(v, bool):
+                errors.append(f"{path}{key}: expected number, got {v!r}")
+        elif want is str:
+            if not isinstance(v, str):
+                errors.append(f"{path}{key}: expected string, got {v!r}")
+        elif want == "num_or_null":
+            if v is not None and (not isinstance(v, _NUM) or isinstance(v, bool)):
+                errors.append(f"{path}{key}: expected number|null, got {v!r}")
+
+
+# Required shape of BENCH_serve.json.  Keys marked "num_or_null" may be null
+# on dense-slot families (no paged pool / no spec section to measure).
+_BENCH_SPEC = {
+    "schema": str,
+    "arch": str,
+    "family": str,
+    "config": {"n_requests": _NUM, "max_new": _NUM, "n_slots": _NUM},
+    "throughput": {
+        "mxfp4_paged_tok_per_s": _NUM,
+        "dense_paged_tok_per_s": _NUM,
+        "mxfp4_gather_tok_per_s": _NUM,
+    },
+    "latency": {
+        "ttft_p50_s": _NUM, "ttft_p95_s": _NUM,
+        "tpot_p50_s": "num_or_null", "tpot_p95_s": "num_or_null",
+        "latency_p50_s": _NUM, "latency_p95_s": _NUM,
+        "queue_wait_p50_s": _NUM,
+    },
+    "tick": {
+        "decode_p50_s": "num_or_null", "decode_p95_s": "num_or_null",
+        "prefill_p50_s": "num_or_null",
+    },
+    "kv": {
+        "cache_bytes_dense": _NUM, "cache_bytes_mxfp4": _NUM,
+        "cache_ratio": _NUM, "bits_per_elem_mxfp4": _NUM,
+        "decode_bytes_ratio_gather_over_paged": "num_or_null",
+        "prefill_bytes_ratio_gather_over_paged": "num_or_null",
+    },
+    "pool": {
+        "occupancy_peak": _NUM,
+        "free_page_watermark": _NUM,
+    },
+    "spec": {
+        "k": _NUM,
+        "proposer": str,
+        "acceptance_rate": "num_or_null",
+        "tokens_per_decode_call": "num_or_null",
+    },
+    "quant_health": {
+        "clip_fraction_k": "num_or_null",
+        "clip_fraction_v": "num_or_null",
+        "zero_fraction_k": "num_or_null",
+        "scale_hist_nonzero_bins": "num_or_null",
+        "scale_code_min": "num_or_null",
+        "scale_code_max": "num_or_null",
+    },
+}
+
+
+def validate_bench(doc: dict) -> list[str]:
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"expected a JSON object, got {type(doc).__name__}"]
+    _check(errors, doc, "", _BENCH_SPEC)
+    if not errors and doc["schema"] != BENCH_SCHEMA:
+        errors.append(f"schema {doc['schema']!r} != {BENCH_SCHEMA!r}")
+    return errors
+
+
+def validate_bench_file(path: str) -> dict:
+    """Load + validate; raises ``ValueError`` listing every violation.
+    Returns the parsed doc on success (CI entry point)."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    errors = validate_bench(doc)
+    if errors:
+        raise ValueError(f"{path} failed {BENCH_SCHEMA} validation:\n  "
+                         + "\n  ".join(errors))
+    return doc
+
+
+_SNAPSHOT_SPEC = {
+    "schema": str,
+    "t": _NUM,
+    "meta": {},
+    "counters": {},
+    "gauges": {},
+    "histograms": {},
+    "binned": {},
+    "rates": {},
+}
+
+
+def validate_snapshot(obj: dict) -> list[str]:
+    errors: list[str] = []
+    if not isinstance(obj, dict):
+        return [f"expected a JSON object, got {type(obj).__name__}"]
+    _check(errors, obj, "", _SNAPSHOT_SPEC)
+    if not errors and obj["schema"] != METRICS_SCHEMA:
+        errors.append(f"schema {obj['schema']!r} != {METRICS_SCHEMA!r}")
+    if not errors:
+        for name, v in obj["counters"].items():
+            if not isinstance(v, int) or v < 0:
+                errors.append(f"counter {name}: expected int >= 0, got {v!r}")
+        for name, s in obj["histograms"].items():
+            if "count" not in s:
+                errors.append(f"histogram {name}: missing count")
+    return errors
+
+
+def validate_metrics_file(path: str) -> int:
+    """Validate every line of a JSONL metrics stream; raises on the first
+    bad line, returns the number of snapshots otherwise."""
+    n = 0
+    with open(path) as fh:
+        for i, line in enumerate(fh, 1):
+            if not line.strip():
+                continue
+            errors = validate_snapshot(json.loads(line))
+            if errors:
+                raise ValueError(f"{path}:{i} failed {METRICS_SCHEMA} "
+                                 f"validation:\n  " + "\n  ".join(errors))
+            n += 1
+    if n == 0:
+        raise ValueError(f"{path}: empty metrics stream")
+    return n

@@ -1,0 +1,391 @@
+"""Engine telemetry: registry correctness, tracing, schema stability, and
+the zero-interference contract.
+
+The load-bearing guarantees pinned here:
+
+* histogram percentiles match ``np.quantile`` exactly below the reservoir
+  bound; counters/gauges/EWMA do what their docstrings say,
+* request-lifecycle spans derive TTFT / TPOT / queue-wait / latency exactly
+  from scripted event timelines AND from a real engine run on a virtual
+  clock,
+* the snapshot schema is stable: every metric in the catalog appears in
+  every snapshot (even all-zero ones), under its declared kind,
+* **zero interference**: an instrumented engine (sinks + per-tick pool
+  health sampling) compiles exactly the same step shapes and emits exactly
+  the same tokens as a default-telemetry engine,
+* the sampler compile cache stays at ONE entry across many distinct seeds
+  (the per-request-seed recompile leak regression),
+* the BENCH_serve.json / metrics-stream validators accept conforming
+  documents and reject broken ones.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import build_model
+from repro.serve import Engine, EngineConfig, SamplingParams, TelemetryConfig
+from repro.serve.sampling import _COMPILED, get_sampler
+from repro.serve.telemetry import CATALOG, EngineTelemetry
+from repro.serve.telemetry.registry import (EwmaRate, Histogram,
+                                            MetricsRegistry)
+from repro.serve.telemetry.schema import (BENCH_SCHEMA, validate_bench,
+                                          validate_metrics_file,
+                                          validate_snapshot)
+from repro.serve.telemetry.tracing import Tracer
+
+pytestmark = pytest.mark.telemetry
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced_config("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def _run_engine(model, params, cfg, *, telemetry=None, spec=None,
+                n_requests=3, max_new=5):
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=48, page_size=8, prefill_chunk=8,
+        telemetry=telemetry, spec=spec))
+    rng = np.random.default_rng(7)
+    for i in range(n_requests):
+        eng.submit(rng.integers(1, cfg.vocab_size, size=5 + 3 * i),
+                   max_new=max_new, arrival_time=0.0)
+    t = 0.0
+    while eng.sched.pending:
+        eng.step(now=t)
+        t += 0.01
+    return eng, t
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge():
+    reg = MetricsRegistry()
+    c = reg.counter("c")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("g")
+    g.set(3.0)
+    g.set_max(1.0)
+    assert g.value == 3.0
+    g.set_max(7.5)
+    assert g.value == 7.5
+    g.set_min(2.0)
+    assert g.value == 2.0
+    # create-or-get with a different kind is a bug, not a new metric
+    with pytest.raises(TypeError):
+        reg.gauge("c")
+
+
+@pytest.mark.parametrize("n", [1, 2, 17, 500])
+def test_histogram_percentiles_match_numpy(n):
+    rng = np.random.default_rng(n)
+    xs = rng.exponential(1.0, size=n)
+    h = Histogram(max_samples=1000)
+    for x in xs:
+        h.observe(float(x))
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        assert h.percentile(q) == pytest.approx(np.quantile(xs, q), rel=1e-12)
+    s = h.summary()
+    assert s["count"] == n
+    assert s["min"] == xs.min() and s["max"] == xs.max()
+    assert s["mean"] == pytest.approx(xs.mean())
+
+
+def test_histogram_reservoir_keeps_recent_window():
+    h = Histogram(max_samples=10)
+    for x in range(100):
+        h.observe(float(x))
+    assert h.count == 100  # streaming stats see everything
+    assert h.vmin == 0.0 and h.vmax == 99.0
+    assert h.percentile(0.0) == 90.0  # reservoir holds the last 10
+
+
+def test_ewma_rate():
+    r = EwmaRate(halflife_s=1.0)
+    assert r.rate is None
+    r.mark(10, t=0.0)
+    r.mark(10, t=1.0)  # first measurable gap: 10 pending + 10 over 1s
+    assert r.rate == pytest.approx(20.0)
+    # a mark at a non-advancing clock accumulates instead of dividing by 0
+    r.mark(5, t=1.0)
+    assert r.rate == pytest.approx(20.0)
+    r.mark(5, t=2.0)  # (5 pending + 5) / 1s = 10/s, blended at alpha=0.5
+    assert r.rate == pytest.approx(15.0)
+
+
+def test_binned_histogram_set_vs_merge():
+    reg = MetricsRegistry()
+    b = reg.binned("b", 4)
+    b.set_counts([0, 1, 2, 0])
+    b.set_counts([0, 3, 0, 0])  # gauge-like: replaced, not accumulated
+    assert b.counts == [0, 3, 0, 0]
+    b.merge_counts([1, 0, 0, 2])
+    assert b.counts == [1, 3, 0, 2]
+    s = b.summary()
+    assert s["nonzero_bins"] == 3 and s["bin_min"] == 0 and s["bin_max"] == 3
+    with pytest.raises(ValueError):
+        b.set_counts([1, 2])
+
+
+def test_registry_reset_preserves_schema():
+    reg = MetricsRegistry()
+    reg.counter("c").inc(5)
+    reg.histogram("h").observe(1.0)
+    names_before = reg.names()
+    reg.reset()
+    assert reg.names() == names_before
+    assert reg.counter("c").value == 0
+    assert reg.histogram("h").count == 0
+
+
+# ---------------------------------------------------------------------------
+# tracing: span ordering + latency derivation
+# ---------------------------------------------------------------------------
+
+
+def test_trace_derivation_scripted(tmp_path):
+    reg = MetricsRegistry()
+    path = str(tmp_path / "trace.jsonl")
+    tr = Tracer(reg, path=path)
+    tr.event(1, "submit", 1.0)
+    tr.event(1, "admit", 2.0)
+    tr.event(1, "first_token", 3.0)
+    tr.tokens(1, 3.0, 1)
+    tr.tokens(1, 4.0, 2)
+    tr.event(1, "retire", 5.0)
+    tr.close()
+
+    done = tr.completed[-1]
+    assert [n for n, _ in done.events] == ["submit", "admit", "first_token",
+                                           "retire"]
+    spans = done.spans()
+    assert spans == [("queued", 1.0, 2.0), ("prefill", 2.0, 3.0),
+                     ("decode", 3.0, 5.0)]
+    d = done.derived()
+    assert d["queue_wait_s"] == 1.0
+    assert d["ttft_s"] == 2.0
+    assert d["tpot_s"] == pytest.approx((4.0 - 3.0) / (3 - 1))
+    assert d["request_latency_s"] == 4.0
+    assert d["n_tokens"] == 3
+    # derived latencies land in the registry histograms on retire
+    assert reg.histogram("ttft_s").count == 1
+    assert reg.histogram("ttft_s").percentile(0.5) == 2.0
+    # and the trace file round-trips
+    line = json.loads(open(path).read())
+    assert line["rid"] == 1 and line["derived"]["ttft_s"] == 2.0
+
+
+def test_trace_single_token_has_no_tpot():
+    tr = Tracer(None)
+    tr.event(2, "submit", 0.0)
+    tr.event(2, "admit", 0.0)
+    tr.event(2, "first_token", 1.0)
+    tr.tokens(2, 1.0, 1)
+    tr.event(2, "retire", 1.0)
+    assert tr.completed[-1].derived()["tpot_s"] is None
+
+
+def test_engine_trace_derivation_virtual_clock(dense_setup):
+    """TTFT/TPOT from a real engine run on a deterministic virtual clock."""
+    cfg, model, params = dense_setup
+    eng, _ = _run_engine(model, params, cfg)
+    snap = eng.telemetry.snapshot()
+    done = list(eng.telemetry.tracer.completed)
+    assert len(done) == 3
+    for trace in done:
+        req = next(r for r in eng.completed if r.rid == trace.rid)
+        d = trace.derived()
+        # the tracer's derivations must agree with the Request bookkeeping
+        assert d["ttft_s"] == pytest.approx(req.ttft())
+        assert d["request_latency_s"] == pytest.approx(req.latency())
+        assert d["n_tokens"] == len(req.tokens)
+        assert d["queue_wait_s"] >= 0.0
+    assert snap["histograms"]["ttft_s"]["count"] == 3
+    assert snap["histograms"]["tpot_s"]["count"] == 3  # max_new=5 > 1 token
+    assert snap["counters"]["tokens_generated"] == sum(
+        len(r.tokens) for r in eng.completed)
+    # first tokens ride on prefill calls, the rest on decode ticks
+    assert snap["counters"]["decode_tokens"] == snap["counters"][
+        "tokens_generated"] - 3
+
+
+# ---------------------------------------------------------------------------
+# schema stability + snapshot/bench validators
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_carries_full_catalog(dense_setup):
+    """Every catalog metric appears in every snapshot under its kind — even
+    before the engine ever steps (consumers can code against the names)."""
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=48, page_size=8, prefill_chunk=8))
+    snap = eng.telemetry.snapshot()
+    section = {"counter": "counters", "gauge": "gauges",
+               "histogram": "histograms", "binned": "binned", "ewma": "rates"}
+    for name, (kind, _) in CATALOG.items():
+        assert name in snap[section[kind]], f"{name} missing from snapshot"
+    # and nothing undeclared leaks in
+    declared = set(CATALOG)
+    for sec in ("counters", "gauges", "histograms", "binned", "rates"):
+        assert set(snap[sec]) <= declared
+    assert validate_snapshot(snap) == []
+
+
+def test_metrics_file_validator(tmp_path):
+    tel = EngineTelemetry(TelemetryConfig(
+        metrics_path=str(tmp_path / "m.jsonl"), emit_every_ticks=0))
+    tel.registry.counter("engine_ticks").inc()
+    tel.emit(1.0)
+    tel.finalize(2.0)
+    assert validate_metrics_file(str(tmp_path / "m.jsonl")) == 2
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"schema": "nope"}\n')
+    with pytest.raises(ValueError):
+        validate_metrics_file(str(bad))
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    with pytest.raises(ValueError):
+        validate_metrics_file(str(empty))
+
+
+def test_bench_validator():
+    import importlib.util
+    import pathlib
+    mod_path = (pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+                / "serve_throughput.py")
+    spec = importlib.util.spec_from_file_location("serve_throughput", mod_path)
+    st = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(st)
+    num = {"mxfp4": dict.fromkeys(
+        ("tokens_per_sec", "ttft_p50_s", "ttft_p95_s", "tpot_p50_s",
+         "tpot_p95_s", "latency_p50_s", "latency_p95_s", "queue_wait_p50_s",
+         "decode_tick_p50_s", "decode_tick_p95_s", "prefill_tick_p50_s",
+         "pool_occupancy_peak", "free_page_watermark", "cache_bytes",
+         "bits_per_kv_elem"), 1.0)}
+    num["dense"] = dict(num["mxfp4"])
+    rep = {
+        "arch": "a", "family": "dense", "n_requests": 2, "max_new": 2,
+        "n_slots": 2, **num,
+        "decode_backends": {"mxfp4/gather": {"tokens_per_sec": 1.0}},
+        "cache_ratio": 3.8, "decode_bytes_ratio_gather_over_paged": 8.0,
+        "spec": {"k": 3, "proposer": "self"},
+    }
+    doc = st.make_bench_baseline(rep)
+    assert doc["schema"] == BENCH_SCHEMA
+    assert validate_bench(doc) == []
+    # null-able fields may be null; required numbers may not
+    doc["spec"]["acceptance_rate"] = None
+    assert validate_bench(doc) == []
+    doc["throughput"]["mxfp4_paged_tok_per_s"] = None
+    assert validate_bench(doc) != []
+    del doc["pool"]
+    assert any("pool" in e for e in validate_bench(doc))
+    assert validate_bench({"schema": BENCH_SCHEMA}) != []
+
+
+# ---------------------------------------------------------------------------
+# zero interference: compiles + tokens identical with sinks on
+# ---------------------------------------------------------------------------
+
+
+def test_instrumented_engine_is_bit_identical(dense_setup, tmp_path):
+    cfg, model, params = dense_setup
+    plain, _ = _run_engine(model, params, cfg, telemetry=None)
+    instrumented, t = _run_engine(
+        model, params, cfg,
+        telemetry=TelemetryConfig(metrics_path=str(tmp_path / "m.jsonl"),
+                                  trace_path=str(tmp_path / "t.jsonl"),
+                                  emit_every_ticks=2, quant_stride=1))
+    # token streams bit-identical
+    assert ({r.rid: r.tokens for r in plain.completed}
+            == {r.rid: r.tokens for r in instrumented.completed})
+    # exactly the same step shapes compiled — sinks and per-tick pool-health
+    # sampling add ZERO jit compilations to the engine's step functions
+    assert plain.compile_counts() == instrumented.compile_counts()
+    assert instrumented.compile_counts()["decode_all"] == 1
+    assert instrumented.compile_counts()["prefill_all"] == 1
+    assert instrumented.compile_counts()["prefill_chunk"] == 0  # paged path
+    snap = instrumented.telemetry.finalize(t)
+    assert snap["counters"]["quant_health_samples"] > 0
+    assert snap["gauges"]["pool_occupancy_peak"] > 0
+    assert snap["binned"]["kv_scale_hist_k"]["nonzero_bins"] >= 1
+    assert 0.0 <= snap["gauges"]["kv_clip_fraction_k"] <= 1.0
+    assert validate_metrics_file(str(tmp_path / "m.jsonl")) >= 1
+
+
+def test_pool_gauges_and_conservation(dense_setup):
+    cfg, model, params = dense_setup
+    eng, t = _run_engine(model, params, cfg)
+    snap = eng.telemetry.snapshot(t)
+    g = snap["gauges"]
+    total = g["pool_pages_total"]
+    assert total == eng.cache.n_pages - 1
+    # everything retired: the pool drained back to empty
+    assert g["pool_pages_free"] == total
+    assert 0 < g["pool_pages_free_watermark"] < total
+    assert g["pool_occupancy"] == 0.0
+    assert 0.0 < g["pool_occupancy_peak"] <= 1.0
+    assert eng.cache.mapped_total() + eng.cache.free_pages == total
+
+
+def test_quant_health_dense_pool_is_none(dense_setup):
+    from repro.serve.telemetry.quant_health import sample_pool_health
+    cfg, model, params = dense_setup
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=48, page_size=8, prefill_chunk=8, kv_dtype="dense"))
+    assert sample_pool_health(eng.cache) is None  # nothing quantized
+    eng2 = Engine(model, params, EngineConfig(
+        n_slots=2, max_len=48, page_size=8, prefill_chunk=8))
+    assert sample_pool_health(eng2.cache) is None  # mxfp4 but nothing mapped
+
+
+# ---------------------------------------------------------------------------
+# sampler compile-cache regression (satellite: one compile per distribution)
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_cache_one_compile_across_seeds():
+    dist = dict(temperature=0.7, top_k=13, top_p=0.9)
+    before = len(_COMPILED)
+    samplers = [get_sampler(SamplingParams(**dist, seed=s)) for s in range(10)]
+    assert len(_COMPILED) - before == 1, \
+        "per-seed sampler recompile leak is back"
+    logits = np.linspace(-2, 2, 64).astype(np.float32)
+    toks = {s(logits, 3) for s in samplers}
+    assert len(toks) > 1, "distinct seeds should decorrelate draws"
+    # all draws share ONE compiled executable
+    fn = samplers[0]._fn
+    assert all(s._fn is fn for s in samplers)
+    assert fn._cache_size() == 1
+    # determinism: the same (params, token_idx) always draws the same token
+    assert samplers[3](logits, 5) == get_sampler(
+        SamplingParams(**dist, seed=3))(logits, 5)
+
+
+def test_sampler_seed_matches_trace_time_seed():
+    """The runtime-seed path must draw exactly what baking the seed into the
+    trace (the old implementation) would have drawn."""
+    from repro.serve.sampling import sample_row
+    sp = SamplingParams(temperature=1.1, top_k=7, seed=42)
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=96), jnp.float32)
+    baked = int(sample_row(logits, sp, jnp.int32(0), jnp.int32(4)))
+    runtime = get_sampler(sp)(np.asarray(logits), 4)
+    assert baked == runtime
