@@ -18,6 +18,11 @@ JSON report:
   (ONE jitted call advances every prefilling slot per tick) vs the per-slot
   gather oracle — prompt tokens/sec, mean + p95 TTFT, and per-chunk KV
   bytes; batched paged prefill must stay token-exact vs the oracle,
+* a shared-prefix A/B (``prefix_cache`` section, ``--shared-prefix`` /
+  ``--smoke``): N users × one system prompt through the radix prefix cache
+  (warm) vs the non-sharing engine (cold) — prefix hit rate, shared tokens,
+  COW pages, prefill tok/s and mean/p95 TTFT cold-vs-warm, with warm-vs-cold
+  token parity and pool page-conservation (no leaks) asserted,
 * persistent cache bytes dense vs FP4 and their ratio,
 * decode-step HBM traffic model: KV bytes touched per batched decode step by
   the fused paged-attention kernel (O(packed KV): read the packed pages in
@@ -127,10 +132,94 @@ def prefill_kv_bytes_per_chunk(cache, backend: str) -> int:
     return decode_kv_bytes_per_step(cache, backend) // cache.n_slots
 
 
+def _bench_shared_prefix(model, cfg, params, n_requests: int, n_slots: int) -> dict:
+    """Shared-prefix A/B: radix prefix cache on (warm) vs off (cold).
+
+    Every request carries the same ``prefix_len``-token system prompt plus a
+    short unique tail (request 0 is the pure prefix, exercising the
+    full-match eager-COW path).  A primer request publishes the prefix into
+    the warm engine's radix index before the measured t=0 burst, so every
+    burst admission aliases the shared pages and prefills only its tail —
+    the cold engine re-prefills everything.  max_new=1 keeps the run
+    prefill-dominated (TTFT is the whole story).  Both engines run with
+    ``debug_cache`` on, and the warm run ends with a leak check: after all
+    retires, evicting the whole index must return the pool to fully free
+    (scratch page 0 aside).
+    """
+    from repro.launch.serve_engine import run_workload
+    from repro.serve import Engine, EngineConfig
+
+    prng = np.random.default_rng(7)
+    page_size, prefix_len, tail_len = 8, 24, 6
+    prefix = prng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    burst = []
+    for i in range(n_requests):
+        if i == 0:
+            prompt = prefix.copy()  # pure-prefix request: full match + COW
+        else:
+            tail = prng.integers(0, cfg.vocab_size, tail_len).astype(np.int32)
+            prompt = np.concatenate([prefix, tail])
+        burst.append((0.0, prompt, 1))
+    primer = np.concatenate(
+        [prefix, prng.integers(0, cfg.vocab_size, tail_len).astype(np.int32)])
+    prompt_toks = sum(len(p) for _, p, _ in burst)
+
+    rep: dict = {"n_requests": n_requests, "prefix_len": prefix_len,
+                 "prompt_tokens": prompt_toks}
+    out = {}
+    for label, on in (("warm", True), ("cold", False)):
+        eng = Engine(model, params, EngineConfig(
+            n_slots=n_slots, max_len=64, page_size=page_size, kv_dtype="mxfp4",
+            prefill_chunk=page_size, decode_backend="paged",
+            prefix_cache=on, debug_cache=True))
+        # warmup compiles the step shapes; the primer publishes the shared
+        # prefix into the warm engine's radix index — both are dropped from
+        # the registry before the measured burst
+        eng.submit(prng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32),
+                   1, arrival_time=0.0)
+        eng.submit(primer, 1, arrival_time=0.0)
+        eng.drain()
+        # second warmup pass: a pure-prefix request now full-matches the
+        # published prefix and eagerly COWs its last page, compiling the
+        # copy_page kernel outside the timed region (the cold engine just
+        # prefills it — keeps both branches' warmups identical)
+        eng.submit(prefix.copy(), 1, arrival_time=0.0)
+        eng.drain()
+        eng.completed.clear()
+        eng.telemetry.reset(eng)
+        t0 = time.perf_counter()
+        done, _ = run_workload(eng, burst, verbose=False)
+        wall = time.perf_counter() - t0
+        ttfts = [r.ttft() for r in done]
+        rep[label] = {
+            "prefill_tok_per_s": round(prompt_toks / wall, 2),
+            "wall_sec": round(wall, 3),
+            "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4),
+            "ttft_p95_s": round(_pct(ttfts, 0.95), 4),
+        }
+        out[label] = {r.rid: list(r.tokens) for r in done}
+        c = eng.telemetry.finalize()["counters"]
+        if on:
+            rep["hit_rate"] = round(
+                c["prefix_hit_requests"] / max(c["prefix_lookups"], 1), 4)
+            rep["shared_tokens"] = c["prefix_shared_tokens"]
+            rep["cow_pages"] = c["prefix_cow_pages"]
+            rep["evicted_pages"] = c["prefix_evicted_pages"]
+            # leak check: every request has retired, so the index holds the
+            # only remaining references — dropping it must free every page
+            eng.cache.check_invariants()
+            eng.prefix.evict(eng.cache, eng.cache.n_pages)
+            rep["no_leaks"] = bool(
+                eng.cache.free_pages == eng.cache.n_pages - 1)
+    # the prefix cache must be invisible at the tokens level
+    rep["parity_warm_vs_cold"] = out["warm"] == out["cold"]
+    return rep
+
+
 def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
           max_new: int = 8, n_slots: int = 4, verify_parity: bool = True,
           spec_k: int = 3, spec_proposer: str = "self",
-          metrics_out: str | None = None) -> dict:
+          metrics_out: str | None = None, shared_prefix: bool = True) -> dict:
     from repro.launch.serve_engine import run_workload
     from repro.serve import Engine, EngineConfig, SpecConfig
     from repro.serve.spec import aggregate_stats
@@ -284,6 +373,11 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
         }
         report["prefill"] = prefill_rep
 
+    # -- shared-prefix A/B: radix prefix cache warm vs cold ------------------
+    if shared_prefix and cfg.family in ("dense", "moe"):
+        report["prefix_cache"] = _bench_shared_prefix(
+            model, cfg, params, n_requests, n_slots)
+
     report["cache_ratio"] = round(
         report["dense"]["cache_bytes"] / report["mxfp4"]["cache_bytes"], 2)
     db = report["decode_backends"]
@@ -322,6 +416,8 @@ def make_bench_baseline(rep: dict) -> dict:
     sp_m = rep.get("spec", {}).get("mxfp4")
     qh = m.get("quant_health", {})
     pf = rep.get("prefill", {}).get("kv_bytes_per_chunk_mxfp4", {})
+    px = rep.get("prefix_cache", {})
+    px_w, px_c = px.get("warm", {}), px.get("cold", {})
     return {
         "schema": BENCH_SCHEMA,
         "arch": rep["arch"],
@@ -373,6 +469,17 @@ def make_bench_baseline(rep: dict) -> dict:
             "scale_hist_nonzero_bins": qh.get("scale_hist_nonzero_bins"),
             "scale_code_min": qh.get("scale_code_min"),
             "scale_code_max": qh.get("scale_code_max"),
+        },
+        "prefix": {
+            "hit_rate": px.get("hit_rate"),
+            "shared_tokens": px.get("shared_tokens"),
+            "cow_pages": px.get("cow_pages"),
+            "warm_ttft_mean_s": px_w.get("ttft_mean_s"),
+            "cold_ttft_mean_s": px_c.get("ttft_mean_s"),
+            "warm_ttft_p95_s": px_w.get("ttft_p95_s"),
+            "cold_ttft_p95_s": px_c.get("ttft_p95_s"),
+            "warm_prefill_tok_per_s": px_w.get("prefill_tok_per_s"),
+            "cold_prefill_tok_per_s": px_c.get("prefill_tok_per_s"),
         },
     }
 
@@ -435,6 +542,16 @@ def run():
              f"{pf['kv_bytes_per_chunk_mxfp4']['ratio_gather_over_paged']}x"),
             ("serve_prefill_parity", 0.0, str(pf["parity_paged_vs_gather"])),
         ]
+    if "prefix_cache" in rep:
+        px = rep["prefix_cache"]
+        rows += [
+            ("serve_prefix_hit_rate", 0.0, f"{px['hit_rate']}"),
+            ("serve_prefix_warm_ttft_mean", 0.0, f"{px['warm']['ttft_mean_s']}s"),
+            ("serve_prefix_cold_ttft_mean", 0.0, f"{px['cold']['ttft_mean_s']}s"),
+            ("serve_prefix_cow_pages", 0.0, f"{px['cow_pages']}"),
+            ("serve_prefix_parity", 0.0, str(px["parity_warm_vs_cold"])),
+            ("serve_prefix_no_leaks", 0.0, str(px["no_leaks"])),
+        ]
     return rows
 
 
@@ -451,27 +568,35 @@ def main():
     ap.add_argument("--spec-proposer", default="self",
                     choices=["self", "ngram"],
                     help="proposer for the spec A/B ('self' = parity oracle)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="run the shared-prefix A/B section (radix prefix "
+                         "cache warm vs cold: hit rate, prefill tok/s, "
+                         "mean/p95 TTFT); implied by --smoke")
     ap.add_argument("--smoke", action="store_true",
                     help="small fixed workload + assert the paged-kernel "
                          "decode metrics, spec-mode parity, "
-                         "tokens-per-decode-call > 1, and the telemetry "
+                         "tokens-per-decode-call > 1, prefix-cache "
+                         "hit/TTFT/parity/leak checks, and the telemetry "
                          "stream/baseline artifacts (CI)")
     ap.add_argument("--metrics-out", default=None,
                     help="stream the primary run's registry snapshots as "
                          "JSON-lines to this path (smoke default: "
-                         "metrics_serve.jsonl next to BENCH_serve.json)")
+                         "benchmarks/out/metrics_serve.jsonl)")
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where to write the schema-versioned benchmark "
                          "baseline ('' to skip)")
     args = ap.parse_args()
     if args.smoke:
         args.reduced, args.requests, args.max_new, args.slots = True, 4, 4, 2
+        args.shared_prefix = True
         if args.metrics_out is None:
-            args.metrics_out = str(REPO_ROOT / "metrics_serve.jsonl")
+            out_dir = REPO_ROOT / "benchmarks" / "out"
+            out_dir.mkdir(parents=True, exist_ok=True)
+            args.metrics_out = str(out_dir / "metrics_serve.jsonl")
     rep = bench(args.arch, args.reduced, args.requests, args.max_new,
                 args.slots, verify_parity=not args.no_parity,
                 spec_k=args.spec_k, spec_proposer=args.spec_proposer,
-                metrics_out=args.metrics_out)
+                metrics_out=args.metrics_out, shared_prefix=args.shared_prefix)
     print(json.dumps(rep, indent=2))
     if args.bench_out:
         write_bench(rep, args.bench_out)
@@ -511,6 +636,19 @@ def main():
             for backend in ("paged", "gather"):
                 assert pf[backend]["prefill_tok_per_s"] > 0
                 assert pf[backend]["ttft_mean_s"] > 0
+        # shared-prefix section: the radix cache must actually hit, COW must
+        # be exercised (the pure-prefix request), warm admission must beat
+        # cold TTFT strictly, and no pool page may leak past all retires
+        px = rep.get("prefix_cache")
+        if px is not None:
+            assert px["parity_warm_vs_cold"], \
+                "PARITY FAILURE: prefix-cached engine != cold engine"
+            assert px["hit_rate"] > 0, "prefix cache never hit"
+            assert px["shared_tokens"] > 0, "no prompt tokens were aliased"
+            assert px["cow_pages"] >= 1, "full-match COW never exercised"
+            assert px["warm"]["ttft_mean_s"] < px["cold"]["ttft_mean_s"], \
+                "prefix cache did not improve mean TTFT"
+            assert px["no_leaks"], "pool pages leaked by the prefix cache"
         # non-spec decode emits exactly one token per batched call
         assert rep["mxfp4"]["tokens_per_decode_call"] == 1.0
         # spec A/B only exists for paged (dense/moe) families
@@ -529,6 +667,8 @@ def main():
         raise SystemExit("PARITY FAILURE: paged-kernel decode != gather-dense decode")
     if rep.get("prefill", {}).get("parity_paged_vs_gather") is False:
         raise SystemExit("PARITY FAILURE: batched paged prefill != gather prefill")
+    if rep.get("prefix_cache", {}).get("parity_warm_vs_cold") is False:
+        raise SystemExit("PARITY FAILURE: prefix-cached engine != cold engine")
     if "dense" in rep["spec"] and not rep["spec"]["dense"]["parity_vs_nonspec"]:
         raise SystemExit("PARITY FAILURE: speculative engine != non-speculative engine")
     if rep["cache_ratio"] < 3.0:

@@ -44,6 +44,11 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=10)
     ap.add_argument("--kv", default="mxfp4", choices=["mxfp4", "dense"])
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged families: radix prefix cache with "
+                         "copy-on-write — prompts get a shared 16-token "
+                         "system prefix so later admissions alias its pages "
+                         "and prefill only their unique tail")
     ap.add_argument("--spec", default=None, choices=["self", "ngram"],
                     help="speculative decoding proposer (paged families)")
     ap.add_argument("--spec-k", type=int, default=4)
@@ -64,7 +69,7 @@ def main():
             if args.spec is not None else None)
     engine = Engine(model, params, EngineConfig(
         n_slots=args.slots, max_len=48, page_size=8, kv_dtype=args.kv,
-        prefill_chunk=8, spec=spec,
+        prefill_chunk=8, prefix_cache=args.prefix_cache, spec=spec,
         telemetry=TelemetryConfig(metrics_path=args.metrics_out,
                                   trace_path=args.trace_out,
                                   quant_stride=4)))
@@ -72,6 +77,12 @@ def main():
     # mixed prompt lengths, arrivals staggered over the first steps
     prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(6, 31)))
                .astype(np.int32) for _ in range(args.requests)]
+    if args.prefix_cache:
+        # shared system prefix (two full pages): the first request to retire
+        # publishes its pages into the radix index, later admissions alias
+        # them and prefill only their unique tail
+        system = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        prompts = [np.concatenate([system, p]) for p in prompts]
     arrive_at_step = sorted(int(rng.integers(0, 4)) for _ in range(args.requests))
 
     t0 = time.time()
@@ -96,6 +107,13 @@ def main():
     # came along for free with the run
     engine.telemetry.finalize()
     print(engine.telemetry.summary())
+    if engine.prefix is not None:
+        c = engine.telemetry.registry.counter
+        print(f"prefix cache: {c('prefix_hit_requests').value}/"
+              f"{c('prefix_lookups').value} admissions hit, "
+              f"{c('prefix_shared_tokens').value} prompt tokens aliased, "
+              f"{c('prefix_cow_pages').value} COW pages, "
+              f"{engine.prefix.cached_pages()} pages cached")
     for label, path in (("metrics", args.metrics_out), ("traces", args.trace_out)):
         if path:
             print(f"{label} → {path}")

@@ -99,6 +99,15 @@ def main():
                     choices=["paged", "gather"],
                     help="paged families: fused paged-attention kernel "
                          "(default) vs gather-dequantize oracle")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged families: radix prefix cache — admissions "
+                         "alias pages of previously-served shared prefixes "
+                         "(copy-on-write, LRU-evicted) and prefill only the "
+                         "unshared tail; token-exact vs the non-sharing "
+                         "engine")
+    ap.add_argument("--debug-cache", action="store_true",
+                    help="run the PagedCache invariant checker after every "
+                         "pool mutation (slow; refcount/conservation audit)")
     ap.add_argument("--method", default="quartet")
     ap.add_argument("--seed", type=int, default=0)
     # speculative decoding (paged families)
@@ -153,7 +162,8 @@ def main():
         engine = Engine(model, params, EngineConfig(
             n_slots=args.slots, max_len=args.max_len, page_size=args.page_size,
             kv_dtype=args.kv, prefill_chunk=args.prefill_chunk, method=args.method,
-            decode_backend=args.decode_backend, spec=spec, telemetry=telemetry))
+            decode_backend=args.decode_backend, prefix_cache=args.prefix_cache,
+            debug_cache=args.debug_cache, spec=spec, telemetry=telemetry))
         done, elapsed = run_workload(engine, workload, extra=make_extra(cfg, key),
                                      sampling=sampling)
 

@@ -82,8 +82,18 @@ def _expert_ffn(xe, params, seed, cfg: ModelConfig, method: str):
 
 
 def moe_ffn(params, x, seed, cfg: ModelConfig, method: str = "quartet",
-            group_tokens: int = 4096):
-    """x: [B, S, D] → (y [B, S, D], aux_loss scalar)."""
+            group_tokens: int = 4096, token_valid=None):
+    """x: [B, S, D] → (y [B, S, D], aux_loss scalar).
+
+    ``token_valid`` ([B, S] bool, optional) marks which lanes carry real
+    tokens.  Batched serving steps pad inactive slots / ragged prefill tails
+    with garbage lanes whose *outputs* are discarded — but without the mask
+    those lanes still compete for expert capacity: a garbage token with a
+    high router score can displace a real token from an expert's top-c
+    selection, perturbing drop patterns at capacity-bound scale as a function
+    of batch padding.  Masked lanes get zero gates, so they score ``NEG_INF``
+    in capacity selection (losing to every real token), contribute nothing to
+    the combine, and drop out of the load-balance statistics."""
     B, S, D = x.shape
     T = B * S
     E, k = cfg.num_experts, cfg.experts_per_token
@@ -100,6 +110,8 @@ def moe_ffn(params, x, seed, cfg: ModelConfig, method: str = "quartet",
     top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
     gates = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=jnp.float32)
                     * top_vals[..., None], axis=2)  # [G, g, E]
+    if token_valid is not None:
+        gates = gates * token_valid.reshape(G, g)[..., None].astype(gates.dtype)
 
     # --- aux losses: load balance [Switch] + router z-loss -------------------
     me = jnp.mean(gates > 0, axis=1)  # fraction of tokens per expert [G, E]
@@ -151,7 +163,8 @@ def init_moe_block(key, cfg: ModelConfig, dtype):
     }
 
 
-def moe_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index, method):
+def moe_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index,
+              method, token_valid=None):
     _, norm = L.make_norm(cfg.norm)
     # causal flag + backend both come from cfg (attention dispatches through
     # models.attention.dispatch_attention / the PagedKV decode path, exactly
@@ -163,5 +176,5 @@ def moe_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index, 
     )
     x = x + h
     h, aux = moe_ffn(params["moe"], norm(params["mlp_norm"], x, cfg.norm_eps),
-                     L.seed_fold(seed, 200), cfg, method)
+                     L.seed_fold(seed, 200), cfg, method, token_valid=token_valid)
     return x + h, new_cache, aux

@@ -4,8 +4,14 @@
 signature for every family:
 
     forward(params, tokens, seed, *, positions=None, caches=None,
-            cache_index=None, extra=None, build_cross=False, method="quartet")
+            cache_index=None, extra=None, build_cross=False, method="quartet",
+            token_valid=None)
         → (logits f32, new_caches, aux_loss)
+
+``token_valid`` ([B, S] bool) marks lanes that carry real tokens in batched
+serving steps; it gates MoE capacity routing (padding lanes must not displace
+real tokens from expert capacity) and is ignored by families without
+cross-token competition.
 """
 
 from __future__ import annotations
@@ -67,11 +73,11 @@ def build_model(cfg: ModelConfig, *, attn_backend: str | None = None) -> Model:
 
         def forward(params, tokens, seed, *, positions=None, caches=None,
                     cache_index=None, extra=None, build_cross=False,
-                    method="quartet", features_only=False):
+                    method="quartet", features_only=False, token_valid=None):
             return lm_forward(params, tokens, cfg, seed, positions=positions,
                               caches=caches, cache_index=cache_index,
                               block_apply=block_apply, method=method, extra=extra,
-                              features_only=features_only)
+                              features_only=features_only, token_valid=token_valid)
 
         if fam == "ssm":
             def cache_spec(batch, max_len):
@@ -90,7 +96,7 @@ def build_model(cfg: ModelConfig, *, attn_backend: str | None = None) -> Model:
     if fam == "hybrid":
         def forward(params, tokens, seed, *, positions=None, caches=None,
                     cache_index=None, extra=None, build_cross=False,
-                    method="quartet", features_only=False):
+                    method="quartet", features_only=False, token_valid=None):
             return hybrid_forward(params, tokens, cfg, seed, positions=positions,
                                   caches=caches, cache_index=cache_index,
                                   method=method, extra=extra,
@@ -103,7 +109,7 @@ def build_model(cfg: ModelConfig, *, attn_backend: str | None = None) -> Model:
     if fam == "encdec":
         def forward(params, tokens, seed, *, positions=None, caches=None,
                     cache_index=None, extra=None, build_cross=False,
-                    method="quartet", features_only=False):
+                    method="quartet", features_only=False, token_valid=None):
             extra = extra or {}
             return encdec_forward(params, tokens, cfg, seed, positions=positions,
                                   source_embeds=extra.get("source_embeds"),
@@ -126,7 +132,7 @@ def build_model(cfg: ModelConfig, *, attn_backend: str | None = None) -> Model:
     if fam == "vlm":
         def forward(params, tokens, seed, *, positions=None, caches=None,
                     cache_index=None, extra=None, build_cross=False,
-                    method="quartet", features_only=False):
+                    method="quartet", features_only=False, token_valid=None):
             extra = extra or {}
             return vlm_forward(params, tokens, cfg, seed, positions=positions,
                                image_embeds=extra.get("image_embeds"), caches=caches,

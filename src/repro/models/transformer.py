@@ -94,7 +94,11 @@ def init_dense_block(key, cfg: ModelConfig, dtype):
     }
 
 
-def dense_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index, method):
+def dense_block(params, x, positions, seed, cfg: ModelConfig, cache, cache_index,
+                method, token_valid=None):
+    # token_valid is accepted for signature parity with moe_block (batched
+    # serving steps thread it uniformly); dense blocks have no cross-token
+    # competition, so padding lanes are already harmless here
     _, norm = L.make_norm(cfg.norm)
     h, new_cache = attention(
         params["attn"], norm(params["attn_norm"], x, cfg.norm_eps), positions,
@@ -143,8 +147,11 @@ def init_lm(key, cfg: ModelConfig, block_init=None):
 
 
 def _layer_scan(params_layers, x, positions, seed, cfg, caches, cache_index,
-                block_apply, method, extra=None):
+                block_apply, method, extra=None, token_valid=None):
     """Scan the block over stacked layer params (+ optional stacked caches)."""
+    # forwarded as a kwarg only when present: training callers (and blocks
+    # without cross-token routing, e.g. mamba1_block) never see it
+    block_kw = {} if token_valid is None else {"token_valid": token_valid}
 
     def body(carry, inp):
         x, aux = carry
@@ -157,7 +164,7 @@ def _layer_scan(params_layers, x, positions, seed, cfg, caches, cache_index,
         x = _barrier(x)
         seed_l = (seed + layer_idx.astype(jnp.uint32) * jnp.uint32(LAYER_SEED_STRIDE)).astype(jnp.uint32)
         x, new_cache, aux_l = block_apply(layer_params, x, positions, seed_l, cfg,
-                                          cache, cache_index, method)
+                                          cache, cache_index, method, **block_kw)
         x = constrain_tokens(x)  # anchor the scan carry's DP/SP sharding
         return (x, aux + aux_l), new_cache
 
@@ -204,6 +211,7 @@ def lm_forward(
     method: str = "quartet",
     extra: Any = None,
     features_only: bool = False,
+    token_valid: jnp.ndarray | None = None,  # [B, S] bool — real-token lanes
 ):
     """Returns (logits [B, S, V] f32 — or [B, S, D] features —, caches, aux)."""
     B, S = tokens.shape
@@ -215,7 +223,8 @@ def lm_forward(
         x = x + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1), axis=0).astype(x.dtype)
 
     x, new_caches, aux = _layer_scan(params["layers"], x, positions, seed, cfg,
-                                     caches, cache_index, block_apply, method, extra)
+                                     caches, cache_index, block_apply, method, extra,
+                                     token_valid)
 
     if features_only:
         return x, new_caches, aux

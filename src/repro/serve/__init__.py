@@ -3,6 +3,7 @@ cache, per-request sampling, speculative decoding, and built-in telemetry."""
 
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.paged_cache import DenseSlotCache, PagedCache, PagedKV
+from repro.serve.prefix_cache import PrefixIndex
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec import SpecConfig
@@ -13,6 +14,7 @@ __all__ = [
     "EngineConfig",
     "PagedCache",
     "PagedKV",
+    "PrefixIndex",
     "DenseSlotCache",
     "Request",
     "RequestState",

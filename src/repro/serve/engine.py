@@ -74,6 +74,7 @@ import numpy as np
 
 from repro.models.registry import Model
 from repro.serve import paged_cache as P
+from repro.serve.prefix_cache import PrefixIndex
 from repro.serve.sampling import SamplingParams, get_sampler
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec.config import SpecConfig
@@ -110,6 +111,18 @@ class EngineConfig:
     # beyond a reservation mid-flight, so a pool sized exactly to the
     # reservations it admits can never raise "out of pages".
     n_pages: int | None = None
+    # prefix sharing (paged families only): radix-index prompt token ids at
+    # admission, alias every fully-covered cached page into the new slot's
+    # table (refcounted; copy-on-write before any divergent write) and
+    # prefill only the unshared tail; LRU-evict refcount-one cached prefixes
+    # under pool pressure.  Token-exact vs the non-sharing engine — aliasing
+    # is safe because MXFP4 quantize-on-write is deterministic, so a shared
+    # prefix's packed pages are bit-identical to what a cold prefill would
+    # have produced.
+    prefix_cache: bool = False
+    # run PagedCache.check_invariants after EVERY allocator mutate (page
+    # conservation, refcount consistency, free-list hygiene) — tests/debug
+    debug_cache: bool = False
     # speculative decoding (paged families only); None → plain decode
     spec: SpecConfig | None = None
     # observability (serve.telemetry).  None → metrics + tracing still
@@ -128,6 +141,10 @@ class Engine:
         if self.spec is not None and not self.paged:
             raise ValueError(
                 f"speculative decoding needs a paged family (dense/moe), "
+                f"got {model.cfg.family!r}")
+        if cfg.prefix_cache and not self.paged:
+            raise ValueError(
+                f"prefix caching needs a paged family (dense/moe), "
                 f"got {model.cfg.family!r}")
         self.telemetry = EngineTelemetry(cfg.telemetry)
         self.sched = Scheduler(cfg.n_slots, cfg.max_len, cfg.prefill_chunk,
@@ -155,7 +172,8 @@ class Engine:
                 n_pages = cfg.n_pages
             self.cache = P.PagedCache(
                 model, n_slots=cfg.n_slots, pages_per_slot=pages_per_slot,
-                page_size=cfg.page_size, n_pages=n_pages, kv_dtype=cfg.kv_dtype)
+                page_size=cfg.page_size, n_pages=n_pages, kv_dtype=cfg.kv_dtype,
+                debug=cfg.debug_cache)
             self.decode_backend = cfg.decode_backend or (
                 "paged" if model.cfg.attn_backend == "paged" else "gather")
             self._steps = build_paged_steps(
@@ -187,6 +205,9 @@ class Engine:
             self._prefill_chunk = jax.jit(prefill_chunk)
             self._prefill_all = None  # dense slots: SSM state must never see padding
 
+        self.prefix = (PrefixIndex(cfg.page_size)
+                       if (self.paged and cfg.prefix_cache) else None)
+        self._admit_plan: dict[int, list[int]] = {}  # rid -> matched page ids
         self.proposer = (build_proposer(self, self.spec)
                          if self.spec is not None else None)
         self.telemetry.attach(self)
@@ -215,14 +236,19 @@ class Engine:
         def can_admit(req: Request) -> bool:
             if not self.paged:
                 return True
-            return self.cache.can_alloc(req.prompt_len + req.max_new)
+            if self.prefix is None:
+                return self.cache.can_alloc(req.prompt_len + req.max_new)
+            match = self.prefix.match(req.prompt, now)
+            ok = self._fresh_pages_needed(req, match) <= (
+                self.cache.free_pages
+                + self.prefix.evictable_pages(self.cache, exclude=match))
+            if ok:
+                self._admit_plan[req.rid] = match
+            return ok
 
-        admitted = self.sched.admit(can_admit)
+        admitted = self.sched.admit(
+            can_admit, on_admit=lambda req: self._on_admit(req, now))
         for req in admitted:
-            if self.paged:
-                self.cache.alloc(req.slot, req.prompt_len + req.max_new)
-            else:
-                self.cache.reset_slot(req.slot)
             if self.proposer is not None:
                 self.proposer.on_admit(req)
             self.telemetry.tracer.event(req.rid, "admit", now)
@@ -294,10 +320,84 @@ class Engine:
         sp = req.sampling if req.sampling is not None else SamplingParams()
         return get_sampler(sp)(logits_row, token_idx)
 
+    # -- prefix sharing ------------------------------------------------------
+
+    def _fresh_pages_needed(self, req: Request, match: list[int]) -> int:
+        """Free-list pages this admission must produce beyond the aliased
+        prefix ``match``: the reservation's uncovered tail, plus one
+        copy-on-write target when the hit covers the ENTIRE prompt (the final
+        prompt token is then re-prefilled into the shared tail page, which
+        must first be detached)."""
+        need = self.cache.pages_needed(req.prompt_len + req.max_new)
+        full = len(match) * self.config.page_size == req.prompt_len
+        return need - len(match) + (1 if full else 0)
+
+    def _on_admit(self, req: Request, now: float) -> None:
+        """Commit the cache side of one admission.  Runs INLINE inside
+        ``Scheduler.admit`` — before the next head's ``can_admit`` — so page
+        allocation, prefix aliasing, eviction, and the eager full-hit COW are
+        transactional against the pool the next admission is judged on."""
+        if not self.paged:
+            self.cache.reset_slot(req.slot)
+            return
+        total = req.prompt_len + req.max_new
+        if self.prefix is None:
+            self.cache.alloc(req.slot, total)
+            return
+        reg = self.telemetry.registry
+        match = self._admit_plan.pop(req.rid, [])
+        shortfall = self._fresh_pages_needed(req, match) - self.cache.free_pages
+        if shortfall > 0:
+            reg.counter("prefix_evicted_pages").inc(
+                self.prefix.evict(self.cache, shortfall, exclude=match))
+        self.cache.alloc(req.slot, total, shared=match)
+        reg.counter("prefix_lookups").inc()
+        if not match:
+            return
+        reg.counter("prefix_hit_requests").inc()
+        covered = len(match) * self.config.page_size
+        if covered == req.prompt_len:
+            # full-prefix hit: skip everything but the final prompt token,
+            # whose logits must be recomputed to sample the first generated
+            # token.  That one-token re-prefill rewrites (bit-identically)
+            # into the last shared page — detach it NOW so the free-list
+            # accounting above stays exact.
+            req.prefill_pos = req.prompt_len - 1
+            reg.counter("prefix_cow_pages").inc(
+                self.cache.cow_range(req.slot, req.prefill_pos, 1))
+            covered -= 1
+        else:
+            req.prefill_pos = covered
+        reg.counter("prefix_shared_tokens").inc(covered)
+
+    def _cow_guard(self, reqs_spans) -> None:
+        """Copy-on-write safety net before a write phase: for each
+        ``(slot, start_tok, n_tokens)`` span about to be written, detach any
+        still-shared page in range (``PagedCache.cow_range``).  Normally a
+        no-op — slots only write past their aliased prefix, and the one real
+        divergence (full-hit re-prefill) is COWed eagerly at admission — but
+        it makes "a slot never writes into a page another holder can see"
+        locally true at every write site rather than a global argument."""
+        if self.prefix is None:
+            return
+        cow = self.telemetry.registry.counter("prefix_cow_pages")
+        for slot, start, n in reqs_spans:
+            cow.inc(self.cache.cow_range(slot, start, n))
+
+    def _prefix_insert(self, req: Request, tokens: np.ndarray, now: float) -> None:
+        """Publish ``req``'s fully-written pages under token chain ``tokens``
+        into the radix index (partial tail pages are never published)."""
+        if self.prefix is None:
+            return
+        added = self.prefix.insert(self.cache, tokens,
+                                   self.cache.tables[req.slot], now)
+        self.telemetry.registry.counter("prefix_inserted_pages").inc(added)
+
     def _run_prefill_call(self, req: Request, tokens_np: np.ndarray):
         start = jnp.int32(req.prefill_pos)
         tokens = jnp.asarray(tokens_np[None, :], jnp.int32)
         if self.paged:
+            self._cow_guard([(req.slot, req.prefill_pos, int(tokens_np.shape[0]))])
             table_row = jnp.asarray(self.cache.tables[req.slot])
             logits, self.cache.pool = self._prefill_chunk(
                 self.params, tokens, start, table_row, self.cache.pool, req.extra)
@@ -318,6 +418,7 @@ class Engine:
         sentinel column and returns each row's last-valid-token logits, from
         which slots that just consumed their whole prompt sample their first
         token."""
+        self._cow_guard([(req.slot, pos, n) for req, pos, n in batch])
         tokens, start, n_valid, mask = marshal_prefill_batch(
             self.config.n_slots, self.config.prefill_chunk,
             ((req.slot, pos, req.prompt[pos:pos + n]) for req, pos, n in batch))
@@ -341,6 +442,7 @@ class Engine:
                 req.tokens.append(tok)
                 req.first_token_time = now
                 req.state = RequestState.DECODE
+                self._prefix_insert(req, req.prompt, now)
                 self._record_first_token(req, now)
                 self._maybe_finish(req, now)
 
@@ -366,6 +468,8 @@ class Engine:
             req.tokens.append(tok)
             req.first_token_time = now
             req.state = RequestState.DECODE
+            if self.paged:
+                self._prefix_insert(req, req.prompt, now)
             self._record_first_token(req, now)
             self._maybe_finish(req, now)
 
@@ -388,6 +492,7 @@ class Engine:
             mask[req.slot] = True
         args = (self.params, jnp.asarray(tokens), jnp.asarray(positions))
         if self.paged:
+            self._cow_guard([(r.slot, int(positions[r.slot]), 1) for r in decoding])
             logits, self.cache.pool = self._decode_all(
                 *args, self.cache.pool, jnp.asarray(self.cache.tables),
                 jnp.asarray(mask))
@@ -446,6 +551,7 @@ class Engine:
             tokens[req.slot, 1:] = drafts[req.slot]
             start[req.slot] = req.prompt_len + len(req.tokens) - 1
             mask[req.slot] = True
+        self._cow_guard([(r.slot, int(start[r.slot]), k + 1) for r in decoding])
         logits, self.cache.pool = self._verify_all(
             self.params, jnp.asarray(tokens), jnp.asarray(start),
             self.cache.pool, jnp.asarray(self.cache.tables), jnp.asarray(mask))
@@ -508,6 +614,18 @@ class Engine:
         if reason is not None:
             self.sched.retire(req, reason, now)  # fires the "retire" span
             if self.paged:
+                if self.prefix is not None:
+                    # publish the whole conversation before releasing the
+                    # slot — a continuation request (this prompt + these
+                    # tokens + more) aliases it later.  The final token is
+                    # excluded: it was emitted but never consumed, so its KV
+                    # was never written; every position up to it holds the
+                    # correct token's KV at retirement (a speculative
+                    # correction is rewritten by the next burst's first row,
+                    # and a retiring burst's correction IS the final token).
+                    chain = np.concatenate(
+                        [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+                    self._prefix_insert(req, chain, now)
                 self.cache.free(req.slot)
             if self.proposer is not None:
                 self.proposer.on_retire(req)

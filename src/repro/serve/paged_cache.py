@@ -111,6 +111,15 @@ def scatter_tokens(pool: dict, page_ids: jnp.ndarray, offsets: jnp.ndarray,
     }
 
 
+@jax.jit
+def copy_page(pool: dict, src: jnp.ndarray, dst: jnp.ndarray) -> dict:
+    """Copy one physical page's full payload ``src`` → ``dst`` across every
+    layer and stream (packed E2M1 codes + E8M0 scales, or dense k/v) — the
+    copy-on-write primitive.  ``src``/``dst`` are runtime int32 operands, so
+    one compile covers every COW the pool ever performs."""
+    return {name: arr.at[:, dst].set(arr[:, src]) for name, arr in pool.items()}
+
+
 def reservation_sizing(n_slots: int, max_len: int, page_size: int,
                        spec_k: int = 0) -> tuple[int, int]:
     """``(pages_per_slot, n_pages)`` under the admission-reservation contract
@@ -146,7 +155,7 @@ class PagedCache:
 
     def __init__(self, model: Model, *, n_slots: int, pages_per_slot: int,
                  page_size: int, n_pages: int | None = None,
-                 kv_dtype: str = "mxfp4"):
+                 kv_dtype: str = "mxfp4", debug: bool = False):
         cfg = model.cfg
         if cfg.family not in ("dense", "moe"):
             raise ValueError(f"PagedCache supports attention-KV families, got {cfg.family!r}")
@@ -177,6 +186,12 @@ class PagedCache:
                          "v_scales": jnp.zeros(sshape, jnp.uint8)}
         self._free = list(range(n_pages - 1, 0, -1))  # pop() hands out low ids first
         self.tables = np.zeros((n_slots, pages_per_slot), np.int32)
+        # physical-page reference counts: a page may be mapped by MANY slot
+        # tables (prefix sharing) and pinned by external holders (the radix
+        # prefix index) — it returns to the free list only at refcount zero.
+        self.refcounts = np.zeros((n_pages,), np.int32)
+        self._external = np.zeros((n_pages,), np.int32)  # non-table pins
+        self.debug = debug  # run check_invariants after every mutate
 
     # -- allocator ----------------------------------------------------------
 
@@ -191,33 +206,68 @@ class PagedCache:
         n = self.pages_needed(n_tokens)
         return n <= min(len(self._free), self.pages_per_slot)
 
-    def alloc(self, slot: int, n_tokens: int) -> None:
+    def _take_fresh(self) -> int:
+        """Pop a page off the free list with refcount 1 (sole owner)."""
+        pid = self._free.pop()
+        if self.refcounts[pid] != 0:
+            raise RuntimeError(f"free-list page {pid} has refcount "
+                               f"{self.refcounts[pid]} != 0")
+        self.refcounts[pid] = 1
+        return pid
+
+    def _decref(self, pid: int) -> bool:
+        """Drop one reference; True if the page returned to the free list.
+        Callers re-sort the free list after a batch of decrefs."""
+        rc = int(self.refcounts[pid]) - 1
+        if rc < 0:
+            raise RuntimeError(f"refcount underflow on page {pid}")
+        self.refcounts[pid] = rc
+        if rc == 0:
+            self._free.append(pid)
+            return True
+        return False
+
+    def alloc(self, slot: int, n_tokens: int, shared=()) -> None:
         """Map enough pages onto ``slot`` to hold ``n_tokens`` positions.
 
-        A slot that still carries live mappings is freed first — zeroing the
-        table row without returning its pages would silently leak them if the
-        engine's alloc/free ordering ever regresses, shrinking the pool until
-        admission wedges.  Page conservation (mapped + free == n_pages - 1)
-        therefore survives re-alloc."""
+        ``shared`` is an optional sequence of LIVE page ids (a radix-index
+        prefix match) aliased at the front of the table row instead of fresh
+        pages — each gains a reference; only the remainder pops the free
+        list.  A slot that still carries live mappings is freed first —
+        zeroing the table row without dropping its references would silently
+        leak pages if the engine's alloc/free ordering ever regresses,
+        shrinking the pool until admission wedges.  Page conservation
+        (live + free == n_pages - 1) therefore survives re-alloc."""
         n = self.pages_needed(n_tokens)
         if n > self.pages_per_slot:
             raise ValueError(f"{n_tokens} tokens need {n} pages > pages_per_slot={self.pages_per_slot}")
+        shared = [int(p) for p in shared]
+        if len(shared) > n:
+            raise ValueError(f"{len(shared)} shared pages > {n} pages needed")
         if self.tables[slot].any():
             self.free(slot)
-        if n > len(self._free):
-            raise RuntimeError(f"out of pages: need {n}, free {len(self._free)}")
-        for i in range(n):
-            self.tables[slot, i] = self._free.pop()
+        if n - len(shared) > len(self._free):
+            raise RuntimeError(
+                f"out of pages: need {n - len(shared)}, free {len(self._free)}")
+        for i, pid in enumerate(shared):
+            if pid == 0 or self.refcounts[pid] <= 0:
+                raise ValueError(f"cannot alias dead/scratch page {pid}")
+            self.tables[slot, i] = pid
+            self.refcounts[pid] += 1
+        for i in range(len(shared), n):
+            self.tables[slot, i] = self._take_fresh()
+        self._check()
 
     def free(self, slot: int) -> None:
         for pid in self.tables[slot]:
             if pid != 0:
-                self._free.append(int(pid))
+                self._decref(int(pid))
         # keep the free list sorted (descending) so the low-ids-first contract
         # of pop() survives out-of-order retirement — allocation stays
         # deterministic under any admission/finish interleaving
         self._free.sort(reverse=True)
         self.tables[slot] = 0
+        self._check()
 
     def mapped_pages(self, slot: int) -> int:
         """Pages currently mapped onto ``slot`` (alloc/ensure fill from index
@@ -230,19 +280,25 @@ class PagedCache:
         return int(np.count_nonzero(self.tables))
 
     def occupancy(self) -> float:
-        """Mapped fraction of the allocatable pool (scratch page excluded) —
-        the telemetry ``pool_occupancy`` gauge."""
+        """Live fraction of the allocatable pool (scratch page excluded) —
+        the telemetry ``pool_occupancy`` gauge.  Counts physical pages, so
+        prefix-shared pages contribute once however many slots alias them."""
         allocatable = self.n_pages - 1
-        return self.mapped_total() / allocatable if allocatable else 0.0
+        return self.live_pages() / allocatable if allocatable else 0.0
+
+    def live_pages(self) -> int:
+        """Physical pages with at least one reference (slot table or external
+        pin).  Conservation: ``live_pages() + free_pages == n_pages - 1``
+        always — unlike ``mapped_total()``, which double-counts a page
+        aliased by several slots."""
+        return int((self.refcounts > 0).sum())
 
     def page_mask(self) -> np.ndarray:
-        """[n_pages] bool — True where a slot maps the page.  The runtime
+        """[n_pages] bool — True where the page is live (referenced by a slot
+        table or an external pin such as the prefix index).  The runtime
         operand of the telemetry pool-health reduction (scratch page 0 is
-        never mapped, so it is never counted)."""
-        mask = np.zeros((self.n_pages,), bool)
-        ids = self.tables.reshape(-1)
-        mask[ids[ids > 0]] = True
-        return mask
+        never referenced, so it is never counted)."""
+        return self.refcounts > 0
 
     def ensure(self, slot: int, n_tokens: int) -> int:
         """Extend ``slot``'s mapping to cover ``n_tokens`` positions (no-op if
@@ -262,7 +318,8 @@ class PagedCache:
             raise RuntimeError(
                 f"out of pages: need {need - have} more, free {len(self._free)}")
         for i in range(have, need):
-            self.tables[slot, i] = self._free.pop()
+            self.tables[slot, i] = self._take_fresh()
+        self._check()
         return need - have
 
     def truncate(self, slot: int, n_tokens: int) -> int:
@@ -282,12 +339,112 @@ class PagedCache:
         for i in range(keep, self.pages_per_slot):
             pid = int(self.tables[slot, i])
             if pid != 0:
-                self._free.append(pid)
+                self._decref(pid)
                 self.tables[slot, i] = 0
                 released += 1
         if released:
             self._free.sort(reverse=True)
+        self._check()
         return released
+
+    # -- prefix sharing: external pins + copy-on-write ----------------------
+
+    def ref_page(self, pid: int) -> None:
+        """Take an external (non-table) reference on a live page — how the
+        radix prefix index pins a cached page so it survives the writing
+        slot's retirement."""
+        if pid == 0 or self.refcounts[pid] <= 0:
+            raise ValueError(f"cannot pin dead/scratch page {pid}")
+        self.refcounts[pid] += 1
+        self._external[pid] += 1
+        self._check()
+
+    def unref_page(self, pid: int) -> bool:
+        """Drop an external reference; True if the page returned to the free
+        list (no slot maps it either) — the eviction path."""
+        if self._external[pid] <= 0:
+            raise ValueError(f"page {pid} has no external reference to drop")
+        self._external[pid] -= 1
+        if self._decref(pid):
+            self._free.sort(reverse=True)
+            self._check()
+            return True
+        self._check()
+        return False
+
+    def cow_range(self, slot: int, start_tok: int, n_tokens: int) -> int:
+        """Copy-on-write guard: before ``slot`` writes positions
+        ``[start_tok, start_tok + n_tokens)``, any page in that range that is
+        SHARED (refcount > 1 — aliased by another slot or pinned by the
+        prefix index) is copied payload-and-all into a fresh page mapped only
+        by this slot; the other holders keep the original bits.  Pages the
+        slot owns outright pass through untouched, so this is free on the
+        non-sharing path.  Returns the number of pages copied."""
+        if n_tokens <= 0:
+            return 0
+        first = start_tok // self.page_size
+        last = (start_tok + n_tokens - 1) // self.page_size
+        copied = 0
+        for idx in range(first, min(last + 1, self.pages_per_slot)):
+            pid = int(self.tables[slot, idx])
+            if pid == 0 or self.refcounts[pid] <= 1:
+                continue  # unmapped (scratch-redirected) or exclusively owned
+            if not self._free:
+                raise RuntimeError(f"out of pages for copy-on-write of page {pid}")
+            new = self._take_fresh()
+            self.pool = copy_page(self.pool, jnp.int32(pid), jnp.int32(new))
+            self.tables[slot, idx] = new
+            self._decref(pid)  # refcount was > 1: never frees here
+            copied += 1
+        self._check()
+        return copied
+
+    # -- invariants ---------------------------------------------------------
+
+    def _check(self) -> None:
+        if self.debug:
+            self.check_invariants()
+
+    def check_invariants(self) -> None:
+        """Allocator-state invariants, asserted after every mutate when the
+        ``debug`` flag is on (and directly by tests):
+
+        * free-list hygiene — in-range ids, no duplicates, sorted descending
+          (the low-ids-first pop contract), every free page at refcount 0;
+        * refcount consistency — each page's refcount equals its table-cell
+          mappings plus its external pins, the scratch page is never
+          referenced, no negative counts;
+        * page conservation — live pages + free pages == n_pages - 1, which
+          also implies no slot maps a freed page.
+        """
+        free = self._free
+        if len(set(free)) != len(free):
+            raise AssertionError("free list contains duplicate pages")
+        if any(p <= 0 or p >= self.n_pages for p in free):
+            raise AssertionError("free list contains out-of-range/scratch ids")
+        if free != sorted(free, reverse=True):
+            raise AssertionError("free list not sorted descending")
+        rc = self.refcounts
+        if int(rc[0]) != 0 or int(self._external[0]) != 0:
+            raise AssertionError("scratch page 0 acquired a reference")
+        if (rc < 0).any() or (self._external < 0).any():
+            raise AssertionError("negative refcount")
+        counts = np.bincount(self.tables.reshape(-1), minlength=self.n_pages)
+        counts[0] = 0  # table zeros mean unmapped, not scratch references
+        expect = counts[:self.n_pages] + self._external
+        if not (rc == expect).all():
+            bad = np.nonzero(rc != expect)[0][:8].tolist()
+            raise AssertionError(
+                f"refcount mismatch on pages {bad}: rc={rc[bad].tolist()} "
+                f"!= tables+external={expect[bad].tolist()}")
+        for p in free:
+            if int(rc[p]) != 0:
+                raise AssertionError(f"page {p} is free but has refcount {rc[p]}")
+        live = int((rc > 0).sum())
+        if live + len(free) != self.n_pages - 1:
+            raise AssertionError(
+                f"page conservation violated: live {live} + free {len(free)} "
+                f"!= {self.n_pages - 1}")
 
     # -- accounting ---------------------------------------------------------
 

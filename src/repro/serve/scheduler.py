@@ -125,10 +125,18 @@ class Scheduler:
 
     # -- per-step decisions -------------------------------------------------
 
-    def admit(self, can_admit) -> list[Request]:
+    def admit(self, can_admit, on_admit=None) -> list[Request]:
         """Move queued requests into free slots.  Strict FIFO: the head waits
         until it fits (admission caps guarantee it eventually does), so no
-        request can be starved by later, smaller arrivals."""
+        request can be starved by later, smaller arrivals.
+
+        ``on_admit(req)``, when given, runs INLINE per admitted request —
+        before ``can_admit`` is consulted for the next one.  The engine uses
+        it to commit cache-side effects (page allocation, prefix aliasing,
+        eviction) transactionally, so a later head's admissibility is judged
+        against the pool state this admission actually left behind, and it
+        may overwrite ``prefill_pos`` when a cached prefix skips prompt
+        tokens."""
         admitted = []
         while self.queue and self.free_slots:
             req = self.queue[0]
@@ -139,6 +147,8 @@ class Scheduler:
             req.state = RequestState.PREFILL
             req.prefill_pos = 0
             self.active[req.slot] = req
+            if on_admit is not None:
+                on_admit(req)
             admitted.append(req)
         return admitted
 

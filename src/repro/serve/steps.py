@@ -31,7 +31,10 @@ positions and let the multi-query paged kernel apply per-row bounds.
 
 Masked lanes follow the engine invariants: positions are clamped to 0 and
 table rows zeroed, so writes land on the reserved scratch page and the
-lane's logits are garbage that the host never reads.
+lane's logits are garbage that the host never reads; every step also passes
+``token_valid`` into the model so padding lanes never compete for MoE expert
+capacity (a garbage lane with a lucky router score must not displace a real
+token from an expert's top-c selection).
 """
 
 from __future__ import annotations
@@ -125,7 +128,8 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
             and their (meaningless) logits are discarded."""
             pos_safe = jnp.where(mask, positions, 0)
             paged = P.PagedKV(pool=pool, tables=_broadcast_tables(tables, mask))
-            logits, new_caches, _ = decode(params, tokens, pos_safe, paged)
+            logits, new_caches, _ = decode(params, tokens, pos_safe, paged,
+                                           token_valid=mask[:, None])
             return logits, new_caches.pool
 
         def verify_all(params, tokens, start, pool, tables, mask):
@@ -135,7 +139,9 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
             positions ≤ start + i."""
             pos_safe = jnp.where(mask, start, 0)
             paged = P.PagedKV(pool=pool, tables=_broadcast_tables(tables, mask))
-            logits, new_caches = verify(params, tokens, pos_safe, paged)
+            logits, new_caches = verify(
+                params, tokens, pos_safe, paged,
+                token_valid=jnp.broadcast_to(mask[:, None], tokens.shape))
             return logits, new_caches.pool
 
         def prefill_all(params, tokens, start, n_valid, pool, tables, mask):
@@ -144,10 +150,10 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
             loop, no [1, 1] remainder shape.  Tokens past a row's ``n_valid``
             are padding: ``prefill_chunk_layout`` positions them on the
             scratch sentinel column, so their quantize-on-write never touches
-            live pages and their output rows are garbage the host ignores
-            (MoE capacity routing does see padding rows — population-
-            dependent drops are a standing property of every batched step,
-            inert below the capacity floor; see the serve README caveat).
+            live pages and their output rows are garbage the host ignores;
+            ``token_valid`` keeps those padding lanes out of MoE expert-
+            capacity competition, so routing (and therefore drop patterns at
+            capacity-bound scale) is independent of batch padding.
             Returns each row's LAST VALID token logits (the only column the
             engine ever reads — it samples the first generated token from the
             final chunk)."""
@@ -159,8 +165,10 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
             paged = P.PagedKV(
                 pool=pool,
                 tables=jnp.broadcast_to(tbl_ext[None], (n_layers, *tbl_ext.shape)))
+            valid = mask[:, None] & (jnp.arange(C, dtype=jnp.int32)[None, :]
+                                     < n_valid[:, None])
             logits, new_caches = verify(params, tokens, pos_safe, paged,
-                                        positions=positions)
+                                        positions=positions, token_valid=valid)
             last = logits[jnp.arange(tokens.shape[0]),
                           jnp.clip(n_valid - 1, 0, C - 1)]
             return last, new_caches.pool
@@ -171,7 +179,8 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
             [L, B, T, Hkv, hd] KV view each step."""
             pos_safe = jnp.where(mask, positions, 0)
             kv = P.gather_pages(pool, tables, dtype)
-            logits, (k2, v2), _ = decode(params, tokens, pos_safe, kv)
+            logits, (k2, v2), _ = decode(params, tokens, pos_safe, kv,
+                                         token_valid=mask[:, None])
             bidx = jnp.arange(tokens.shape[0])
             k_new = k2[:, bidx, pos_safe]  # [L, B, Hkv, hd]
             v_new = v2[:, bidx, pos_safe]
@@ -186,7 +195,9 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
             B, S = tokens.shape
             pos_safe = jnp.where(mask, start, 0)
             kv = P.gather_pages(pool, tables, dtype)
-            logits, (k2, v2) = verify(params, tokens, pos_safe, kv)
+            logits, (k2, v2) = verify(
+                params, tokens, pos_safe, kv,
+                token_valid=jnp.broadcast_to(mask[:, None], tokens.shape))
             bidx = jnp.arange(B)
             positions = pos_safe[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
             k_new = k2[:, bidx[:, None], positions]  # [L, B, S, Hkv, hd]

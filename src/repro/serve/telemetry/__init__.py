@@ -94,6 +94,15 @@ CATALOG: dict[str, tuple[str, str]] = {
     "drafts_proposed": ("counter", "drafted tokens at emittable positions"),
     "drafts_accepted": ("counter", "drafted tokens the target accepted"),
     "quant_health_samples": ("counter", "pool-health reductions fetched"),
+    # counters — prefix sharing (zero unless EngineConfig.prefix_cache)
+    "prefix_lookups": ("counter", "admissions that consulted the radix index"),
+    "prefix_hit_requests": ("counter", "admissions that aliased >= 1 page"),
+    "prefix_shared_tokens": ("counter",
+                             "prompt tokens skipped via aliased pages"),
+    "prefix_inserted_pages": ("counter", "pages published into the index"),
+    "prefix_cow_pages": ("counter", "shared pages detached by copy-on-write"),
+    "prefix_evicted_pages": ("counter",
+                             "cached pages LRU-evicted under pool pressure"),
     # gauges — scheduler / pool pressure
     "queue_depth": ("gauge", "requests waiting for a slot"),
     "slots_active": ("gauge", "slots holding a live request"),
@@ -106,6 +115,8 @@ CATALOG: dict[str, tuple[str, str]] = {
     "pool_occupancy_peak": ("gauge", "highest occupancy seen"),
     "kv_cache_bytes": ("gauge", "persistent KV bytes held by the cache"),
     "spec_acceptance_rate": ("gauge", "cumulative accepted / proposed drafts"),
+    "prefix_cached_pages": ("gauge", "pages pinned by the radix prefix index"),
+    "prefix_hit_rate": ("gauge", "cumulative hit admissions / lookups"),
     # gauges — jit compile counts (compile storms show up here)
     "jit_compiled_decode_all": ("gauge", "compiled variants of decode_all"),
     "jit_compiled_prefill_all": ("gauge", "compiled variants of prefill_all"),
@@ -213,6 +224,12 @@ class EngineTelemetry:
             occ = engine.cache.occupancy()
             g("pool_occupancy").set(occ)
             g("pool_occupancy_peak").set_max(occ)
+            prefix = getattr(engine, "prefix", None)
+            if prefix is not None:
+                g("prefix_cached_pages").set(prefix.cached_pages())
+                if (lookups := reg.counter("prefix_lookups").value):
+                    g("prefix_hit_rate").set(
+                        reg.counter("prefix_hit_requests").value / lookups)
         for name, count in engine.compile_counts().items():
             g(f"jit_compiled_{name}").set(count)
         toks = reg.counter("tokens_generated").value

@@ -21,7 +21,9 @@ import numbers
 
 from repro.serve.telemetry.registry import METRICS_SCHEMA
 
-BENCH_SCHEMA = "repro.bench_serve/v1"
+# v2: adds the "prefix" section (shared-prefix workload: hit rate, warm/cold
+# TTFT, prefill tok/s) — null-filled when the benchmark skips that section
+BENCH_SCHEMA = "repro.bench_serve/v2"
 
 _NUM = numbers.Real
 
@@ -93,6 +95,17 @@ _BENCH_SPEC = {
         "scale_hist_nonzero_bins": "num_or_null",
         "scale_code_min": "num_or_null",
         "scale_code_max": "num_or_null",
+    },
+    "prefix": {
+        "hit_rate": "num_or_null",
+        "shared_tokens": "num_or_null",
+        "cow_pages": "num_or_null",
+        "warm_ttft_mean_s": "num_or_null",
+        "cold_ttft_mean_s": "num_or_null",
+        "warm_ttft_p95_s": "num_or_null",
+        "cold_ttft_p95_s": "num_or_null",
+        "warm_prefill_tok_per_s": "num_or_null",
+        "cold_prefill_tok_per_s": "num_or_null",
     },
 }
 

@@ -40,14 +40,15 @@ def make_chunk_prefill_step(model: Model, *, method: str = "quartet") -> Callabl
     cfg = model.cfg
     compute_dtype = jnp.dtype(cfg.dtype)
 
-    def prefill_chunk(params, tokens, start, caches, extra=None):
+    def prefill_chunk(params, tokens, start, caches, extra=None, token_valid=None):
         """tokens [B, C], start [B] → (last_logits [B, V], caches, start+C)."""
         cparams = _cast_params(params, compute_dtype)
         B, C = tokens.shape
         positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
         logits, caches, _ = model.forward(
             cparams, tokens, jnp.uint32(0), positions=positions, caches=caches,
-            cache_index=start, extra=extra, build_cross=True, method=method)
+            cache_index=start, extra=extra, build_cross=True, method=method,
+            token_valid=token_valid)
         return logits[:, -1, :], caches, start + C
 
     return prefill_chunk
@@ -90,7 +91,8 @@ def make_verify_step(model: Model, *, method: str = "quartet") -> Callable:
     vmodel = build_model(dataclasses.replace(model.cfg, attn_rows_shared=False))
     compute_dtype = jnp.dtype(vmodel.cfg.dtype)
 
-    def verify(params, tokens, start, caches, extra=None, positions=None):
+    def verify(params, tokens, start, caches, extra=None, positions=None,
+               token_valid=None):
         """tokens [B, S], start [B] → (logits [B, S, V] f32, caches)."""
         cparams = _cast_params(params, compute_dtype)
         B, S = tokens.shape
@@ -98,7 +100,8 @@ def make_verify_step(model: Model, *, method: str = "quartet") -> Callable:
             positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
         logits, caches, _ = vmodel.forward(
             cparams, tokens, jnp.uint32(0), positions=positions, caches=caches,
-            cache_index=start, extra=extra, method=method)
+            cache_index=start, extra=extra, method=method,
+            token_valid=token_valid)
         return logits, caches
 
     return verify
@@ -108,13 +111,14 @@ def make_decode_step(model: Model, *, method: str = "quartet") -> Callable:
     cfg = model.cfg
     compute_dtype = jnp.dtype(cfg.dtype)
 
-    def decode(params, token, position, caches, extra=None):
+    def decode(params, token, position, caches, extra=None, token_valid=None):
         """token [B, 1], position [B] → (logits [B, V], caches, position+1)."""
         cparams = _cast_params(params, compute_dtype)
         positions = position[:, None]
         logits, caches, _ = model.forward(
             cparams, token, jnp.uint32(0), positions=positions, caches=caches,
-            cache_index=position, extra=extra, method=method)
+            cache_index=position, extra=extra, method=method,
+            token_valid=token_valid)
         return logits[:, -1, :], caches, position + 1
 
     return decode

@@ -103,3 +103,43 @@ def test_attention_kv_padding_exact():
     np.testing.assert_allclose(np.asarray(out_chunked, np.float32),
                                np.asarray(out_single, np.float32),
                                rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_routing_ignores_padding_lanes():
+    """Padding lanes must not compete for expert capacity: at a capacity-tight
+    config, a garbage lane with a large router score would displace a real
+    token from an expert's top-c selection — so the valid lanes' outputs would
+    depend on what happens to sit in the padding.  With ``token_valid`` the
+    result on valid lanes must be bit-identical whatever the padding holds."""
+    from repro.configs import get_reduced_config
+    from repro.models.moe import init_moe_ffn, moe_capacity, moe_ffn
+
+    cfg = dataclasses.replace(get_reduced_config("qwen3-moe-235b-a22b"),
+                              capacity_factor=0.25)
+    B, S = 2, 256  # row 1 is all padding
+    c = moe_capacity(cfg, B * S)
+    # the config must actually be capacity-bound for the test to mean anything
+    assert c < S * cfg.experts_per_token / cfg.num_experts * 2
+    params = init_moe_ffn(jax.random.PRNGKey(0), cfg, jnp.bfloat16)
+    x_valid = jax.random.normal(jax.random.PRNGKey(1), (1, S, cfg.d_model),
+                                jnp.bfloat16)
+    mask = jnp.concatenate([jnp.ones((1, S), bool), jnp.zeros((1, S), bool)])
+
+    def run(pad_key, token_valid):
+        # large-amplitude garbage: wins router top-c whenever it may compete
+        pad = 100.0 * jax.random.normal(pad_key, (1, S, cfg.d_model),
+                                        jnp.bfloat16)
+        x = jnp.concatenate([x_valid, pad])
+        y, _ = moe_ffn(params, x, jnp.uint32(7), cfg,
+                       token_valid=token_valid)
+        return np.asarray(y[0], np.float32)
+
+    y_a = run(jax.random.PRNGKey(2), mask)
+    y_b = run(jax.random.PRNGKey(3), mask)
+    np.testing.assert_array_equal(y_a, y_b)
+    # regression guard: without the mask the garbage lanes DO perturb routing
+    # here (that was the bug) — if this stops failing, the config is no longer
+    # capacity-tight and the test above has lost its teeth
+    y_a_unmasked = run(jax.random.PRNGKey(2), None)
+    y_b_unmasked = run(jax.random.PRNGKey(3), None)
+    assert not np.array_equal(y_a_unmasked, y_b_unmasked)

@@ -101,8 +101,9 @@ def test_kv_pack_kernel_matches_reference():
 def test_paged_allocator_freelist():
     cfg = get_reduced_config("qwen3-1.7b")
     model = build_model(cfg)
+    # debug=True re-audits refcounts / conservation after every mutation
     cache = PagedCache(model, n_slots=2, pages_per_slot=4, page_size=8,
-                       n_pages=6, kv_dtype="dense")
+                       n_pages=6, kv_dtype="dense", debug=True)
     assert cache.free_pages == 5  # page 0 reserved as scratch
     cache.alloc(0, 17)  # 3 pages
     assert cache.free_pages == 2
@@ -116,6 +117,7 @@ def test_paged_allocator_freelist():
     assert not cache.can_alloc(33)
     with pytest.raises(ValueError):
         cache.alloc(1, 8 * 5)  # exceeds pages_per_slot
+    cache.check_invariants()
 
 
 def test_alloc_conserves_pages_on_realloc():
@@ -126,7 +128,7 @@ def test_alloc_conserves_pages_on_realloc():
     cfg = get_reduced_config("qwen3-1.7b")
     model = build_model(cfg)
     cache = PagedCache(model, n_slots=2, pages_per_slot=4, page_size=8,
-                       kv_dtype="dense")
+                       kv_dtype="dense", debug=True)
     total = cache.n_pages - 1
 
     def mapped():
