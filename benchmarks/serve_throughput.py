@@ -23,6 +23,13 @@ JSON report:
   (warm) vs the non-sharing engine (cold) — prefix hit rate, shared tokens,
   COW pages, prefill tok/s and mean/p95 TTFT cold-vs-warm, with warm-vs-cold
   token parity and pool page-conservation (no leaks) asserted,
+* a multi-device A/B (``sharding`` section, ``--tp`` / ``--dp``): the
+  TP-sharded engine (packed pool + paged-attention grid sharded over KV
+  heads on the ``model`` mesh axis) and the DP-replicated engine
+  (independent replicas on disjoint device groups) vs the single-device
+  engine — token parity asserted, per-shard pool bytes, TTFT/TPOT deltas,
+  per-replica and aggregate decode tok/s; null when ``tp == dp == 1`` or
+  the process sees too few devices,
 * persistent cache bytes dense vs FP4 and their ratio,
 * decode-step HBM traffic model: KV bytes touched per batched decode step by
   the fused paged-attention kernel (O(packed KV): read the packed pages in
@@ -216,10 +223,124 @@ def _bench_shared_prefix(model, cfg, params, n_requests: int, n_slots: int) -> d
     return rep
 
 
+def _bench_sharded(model, cfg, params, n_requests: int, n_slots: int,
+                   tp: int, dp: int) -> dict | None:
+    """Multi-device A/B: single-device vs TP-sharded vs DP-replicated.
+
+    The TP engine shards the packed MXFP4 pool (and the paged-attention
+    grid) over the KV-head axis; the DP engine runs independent replicas on
+    disjoint device groups behind a shared request-id counter.  Both must be
+    token-exact vs the single-device engine (sharding is head/expert slices
+    + tiled all_gathers, never a cross-shard reduction), so parity is an
+    equality check on the sorted-by-rid token lists.  DP aggregate
+    throughput is total decode tokens over the critical-path replica's busy
+    seconds — replicas tick sequentially on one host here but run
+    concurrently in deployment.
+
+    Returns ``None`` (reported as ``sharding: null``) when there is nothing
+    to shard (``tp == dp == 1``), the family has no paged pool, or the
+    process sees fewer than ``tp * dp`` devices (run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+    """
+    from repro.launch.serve_engine import run_workload
+    from repro.serve import (EngineConfig, ReplicatedEngine, ShardingConfig,
+                             make_engine)
+
+    n_dev = len(jax.devices())
+    if cfg.family not in ("dense", "moe") or (tp <= 1 and dp <= 1) \
+            or tp * dp > n_dev:
+        return None
+
+    prng = np.random.default_rng(11)
+    max_new = 8
+    burst = [(0.0,
+              prng.integers(0, cfg.vocab_size,
+                            int(prng.integers(8, 25))).astype(np.int32),
+              max_new)
+             for _ in range(n_requests)]
+
+    def run_one(sh):
+        eng = make_engine(model, params, EngineConfig(
+            n_slots=n_slots, max_len=64, page_size=8, kv_dtype="mxfp4",
+            prefill_chunk=8, decode_backend="paged", sharding=sh))
+        engines = eng.engines if isinstance(eng, ReplicatedEngine) else [eng]
+        # warmup: one submit per replica — the placer round-robins exact
+        # inventory ties, so every replica compiles its steps untimed
+        for _ in engines:
+            eng.submit(burst[0][1], 2, arrival_time=0.0)
+        eng.drain()
+        for e in engines:
+            e.completed.clear()
+            e.telemetry.reset(e)
+        if isinstance(eng, ReplicatedEngine):
+            eng.busy_s = [0.0] * len(engines)
+        t0 = time.perf_counter()
+        done, _ = run_workload(eng, burst, verbose=False)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.tokens) for r in done)
+        out = [list(r.tokens) for r in sorted(done, key=lambda r: r.rid)]
+        return eng, engines, out, toks, wall
+
+    def _latency(e):  # p50 TTFT/TPOT from the engine's own tracer
+        h = e.telemetry.finalize()["histograms"]
+        rnd = lambda v: None if v is None else round(v, 4)
+        return rnd(h["ttft_s"].get("p50")), rnd(h["tpot_s"].get("p50"))
+
+    s_eng, _, s_out, s_toks, s_wall = run_one(None)
+    s_ttft, s_tpot = _latency(s_eng)
+    s_rate = round(s_toks / s_wall, 2)
+    rep: dict = {
+        "tp": tp, "dp": dp, "devices": n_dev,
+        "single": {"decode_tok_per_s": s_rate, "ttft_p50_s": s_ttft,
+                   "tpot_p50_s": s_tpot, "wall_sec": round(s_wall, 3)},
+        "tp_run": None, "dp_run": None,
+    }
+
+    if tp > 1:
+        t_eng, _, t_out, t_toks, t_wall = run_one(ShardingConfig(tp=tp, dp=1))
+        t_ttft, t_tpot = _latency(t_eng)
+        rep["tp_run"] = {
+            "decode_tok_per_s": round(t_toks / t_wall, 2),
+            "ttft_p50_s": t_ttft,
+            "tpot_p50_s": t_tpot,
+            "wall_sec": round(t_wall, 3),
+            "pool_bytes_per_shard": t_eng.cache_bytes() // tp,
+            "parity_vs_single": float(t_out == s_out),
+            "ttft_p50_delta_s": None if (t_ttft is None or s_ttft is None)
+            else round(t_ttft - s_ttft, 4),
+            "tpot_p50_delta_s": None if (t_tpot is None or s_tpot is None)
+            else round(t_tpot - s_tpot, 4),
+        }
+
+    if dp > 1:
+        d_eng, d_engines, d_out, d_toks, d_wall = run_one(
+            ShardingConfig(tp=tp, dp=dp))
+        busy = [max(b, 1e-9) for b in d_eng.busy_s]
+        per_replica = [
+            round(sum(len(q.tokens) for q in e.completed) / busy[r], 2)
+            for r, e in enumerate(d_engines)]
+        agg = round(d_toks / max(busy), 2)
+        # DP scaling is measured against ONE identical replica: when the
+        # replicas are tp-sharded, that baseline is the tp_run rate (a tp=1
+        # baseline would conflate TP per-tick overhead with DP scaling)
+        base_rate = rep["tp_run"]["decode_tok_per_s"] if tp > 1 else s_rate
+        rep["dp_run"] = {
+            "aggregate_decode_tok_per_s": agg,
+            "per_replica_tok_per_s": per_replica,
+            "busy_s": [round(b, 3) for b in busy],
+            "speedup_vs_one_replica": round(agg / max(base_rate, 1e-9), 2),
+            "parity_vs_single": float(d_out == s_out),
+            "pool_bytes_per_shard": d_eng.cache_bytes() // (tp * dp),
+            "wall_sec": round(d_wall, 3),
+        }
+    return rep
+
+
 def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
           max_new: int = 8, n_slots: int = 4, verify_parity: bool = True,
           spec_k: int = 3, spec_proposer: str = "self",
-          metrics_out: str | None = None, shared_prefix: bool = True) -> dict:
+          metrics_out: str | None = None, shared_prefix: bool = True,
+          tp: int = 1, dp: int = 1) -> dict:
     from repro.launch.serve_engine import run_workload
     from repro.serve import Engine, EngineConfig, SpecConfig
     from repro.serve.spec import aggregate_stats
@@ -378,6 +499,10 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
         report["prefix_cache"] = _bench_shared_prefix(
             model, cfg, params, n_requests, n_slots)
 
+    # -- multi-device A/B: TP-sharded pool/kernels + DP engine replicas ------
+    report["sharding"] = _bench_sharded(
+        model, cfg, params, n_requests, n_slots, tp, dp)
+
     report["cache_ratio"] = round(
         report["dense"]["cache_bytes"] / report["mxfp4"]["cache_bytes"], 2)
     db = report["decode_backends"]
@@ -481,6 +606,9 @@ def make_bench_baseline(rep: dict) -> dict:
             "warm_prefill_tok_per_s": px_w.get("prefill_tok_per_s"),
             "cold_prefill_tok_per_s": px_c.get("prefill_tok_per_s"),
         },
+        # null on single-device runs; the dict from _bench_sharded already
+        # matches the schema's nullable "sharding" block
+        "sharding": rep.get("sharding"),
     }
 
 
@@ -552,6 +680,24 @@ def run():
             ("serve_prefix_parity", 0.0, str(px["parity_warm_vs_cold"])),
             ("serve_prefix_no_leaks", 0.0, str(px["no_leaks"])),
         ]
+    if rep.get("sharding"):
+        sh = rep["sharding"]
+        if sh["tp_run"]:
+            rows += [
+                ("serve_tp_parity", 0.0,
+                 str(sh["tp_run"]["parity_vs_single"] == 1.0)),
+                ("serve_tp_pool_bytes_per_shard", 0.0,
+                 f"{sh['tp_run']['pool_bytes_per_shard']}"),
+            ]
+        if sh["dp_run"]:
+            rows += [
+                ("serve_dp_parity", 0.0,
+                 str(sh["dp_run"]["parity_vs_single"] == 1.0)),
+                ("serve_dp_aggregate_tok_per_s", 0.0,
+                 f"{sh['dp_run']['aggregate_decode_tok_per_s']}tok/s"),
+                ("serve_dp_speedup", 0.0,
+                 f"{sh['dp_run']['speedup_vs_one_replica']}x"),
+            ]
     return rows
 
 
@@ -578,6 +724,16 @@ def main():
                          "tokens-per-decode-call > 1, prefix-cache "
                          "hit/TTFT/parity/leak checks, and the telemetry "
                          "stream/baseline artifacts (CI)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for the sharding A/B "
+                         "(shards the packed KV pool + paged-attention grid "
+                         "over the 'model' mesh axis; needs tp*dp devices — "
+                         "force them on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel engine-replica count for the "
+                         "sharding A/B (independent replicas on disjoint "
+                         "device groups)")
     ap.add_argument("--metrics-out", default=None,
                     help="stream the primary run's registry snapshots as "
                          "JSON-lines to this path (smoke default: "
@@ -596,8 +752,13 @@ def main():
     rep = bench(args.arch, args.reduced, args.requests, args.max_new,
                 args.slots, verify_parity=not args.no_parity,
                 spec_k=args.spec_k, spec_proposer=args.spec_proposer,
-                metrics_out=args.metrics_out, shared_prefix=args.shared_prefix)
+                metrics_out=args.metrics_out, shared_prefix=args.shared_prefix,
+                tp=args.tp, dp=args.dp)
     print(json.dumps(rep, indent=2))
+    if (args.tp > 1 or args.dp > 1) and rep.get("sharding") is None:
+        print(f"sharding section skipped: {args.tp * args.dp} devices needed, "
+              f"{len(jax.devices())} visible (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)", file=sys.stderr)
     if args.bench_out:
         write_bench(rep, args.bench_out)
         print(f"wrote {args.bench_out}", file=sys.stderr)
@@ -649,6 +810,20 @@ def main():
             assert px["warm"]["ttft_mean_s"] < px["cold"]["ttft_mean_s"], \
                 "prefix cache did not improve mean TTFT"
             assert px["no_leaks"], "pool pages leaked by the prefix cache"
+        # sharding A/B: TP and DP engines must be token-exact vs the
+        # single-device engine, and dp >= 2 replicas must actually scale —
+        # aggregate decode throughput >= 1.5x the single-replica rate
+        sh = rep.get("sharding")
+        if sh is not None:
+            if sh["tp_run"] is not None:
+                assert sh["tp_run"]["parity_vs_single"] == 1.0, \
+                    "PARITY FAILURE: TP-sharded engine != single-device engine"
+                assert sh["tp_run"]["pool_bytes_per_shard"] > 0
+            if sh["dp_run"] is not None:
+                assert sh["dp_run"]["parity_vs_single"] == 1.0, \
+                    "PARITY FAILURE: DP-replicated engine != single-device engine"
+                assert sh["dp_run"]["speedup_vs_one_replica"] >= 1.5, \
+                    "DP aggregate decode throughput below 1.5x one replica"
         # non-spec decode emits exactly one token per batched call
         assert rep["mxfp4"]["tokens_per_decode_call"] == 1.0
         # spec A/B only exists for paged (dense/moe) families

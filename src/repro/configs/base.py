@@ -88,6 +88,17 @@ class ModelConfig:
     # for prefill_all) put every slot's rows at genuinely different per-slot
     # offsets, so masks and rope angles must be per row.
     attn_rows_shared: bool = True
+    # Tensor-parallel serving (set by serve.placement via dataclasses.replace,
+    # never by hand): when ``tp_axis`` names a shard_map mesh axis of (static)
+    # size ``tp_size``, the paged/gather decode paths treat their KV cache
+    # operands as head-sharded — each shard computes its local Hkv/tp KV heads
+    # (and E/tp experts for MoE), runs attention on its pool slice, and
+    # all_gathers outputs over the head axis.  Exactness-preserving by
+    # construction: per-head attention is independent and the tiled
+    # all_gather is a pure concat, so no cross-shard reduction ever reorders
+    # floating-point sums.  None → single-device behaviour, bit-identical.
+    tp_axis: str | None = None
+    tp_size: int = 1
     remat: bool = True
     # "full": recompute everything (paper-faithful baseline);
     # "dots": save no-batch-dim dot outputs (skips fwd GEMM recompute — §Perf)

@@ -220,6 +220,25 @@ def batch_partition(mesh: Mesh, batch: int, seq: int | None = None) -> P:
     return P(None, None)
 
 
+def serve_pool_partition(pool: Any, mesh: Mesh) -> Any:
+    """PartitionSpecs for the serving engine's packed page pool.
+
+    Every pool leaf is ``[L, n_pages, page, H, payload]`` (packed codes,
+    scales, or a dense-dtype payload) — the KV-head dim (axis 3) is the
+    natural shard axis for GQA serving: the paged-attention grid is already
+    ``(B, Hkv, pages)``, so each shard runs the identical kernel over its
+    local ``Hkv/tp`` heads and local pool slice.  Divisibility-guarded like
+    every rule here: a non-divisible head count falls back to replicated,
+    which the models' shape-based tp detection treats as "not sharded"
+    (consistent by construction)."""
+
+    def spec(leaf):
+        ax = _fit(mesh, leaf.shape[3], "model")
+        return P(None, None, None, ax, None)
+
+    return jax.tree.map(spec, pool)
+
+
 def cache_partition(cache_specs: Any, mesh: Mesh, batch: int) -> Any:
     """KV/SSM cache sharding: batch dim → DP axes if divisible; kv-head or
     inner dims → model if divisible; long sequences → data."""

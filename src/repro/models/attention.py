@@ -160,6 +160,24 @@ def dispatch_attention(
                              shared_mask=shared_mask)
 
 
+def _tp_slice_heads(q, k, v, cfg: ModelConfig, local_kv_heads: int):
+    """Tensor-parallel head slicing inside a shard_map body: the KV cache
+    operand carries ``local_kv_heads = Hkv / tp`` heads, so keep only this
+    shard's contiguous KV-head block of the freshly-projected k/v — and its
+    GQA query group (q's head ordering is kv-head-major: head ``h`` of group
+    ``g`` sits at ``g * group + h``, the same ``reshape(B, S, Hkv, group,
+    hd)`` layout both attention backends use).  Exactness-preserving: no
+    arithmetic happens here, only a slice; the matching ``all_gather(...,
+    tiled=True)`` on the attention output is a pure concat."""
+    r = jax.lax.axis_index(cfg.tp_axis)
+    group = cfg.num_heads // cfg.num_kv_heads
+    k = jax.lax.dynamic_slice_in_dim(k, r * local_kv_heads, local_kv_heads, axis=2)
+    v = jax.lax.dynamic_slice_in_dim(v, r * local_kv_heads, local_kv_heads, axis=2)
+    q = jax.lax.dynamic_slice_in_dim(q, r * local_kv_heads * group,
+                                     local_kv_heads * group, axis=2)
+    return q, k, v
+
+
 def _paged_decode(params, x, q, positions, seed, cfg: ModelConfig,
                   paged: PagedKV, method):
     """Batched decode/verify/prefill directly over the packed pool:
@@ -183,6 +201,12 @@ def _paged_decode(params, x, q, positions, seed, cfg: ModelConfig,
 
     kleaf = next(iter(paged.pool.values()))
     ps = kleaf.shape[1]
+    # tp: a head-sharded pool slice announces itself by shape — each shard
+    # quantize-scatters and attends over its local Hkv/tp heads only, then
+    # all_gathers the group outputs (exact concat) before the wo projection
+    tp_sharded = cfg.tp_axis is not None and kleaf.shape[2] != nkv
+    if tp_sharded:
+        q, k, v = _tp_slice_heads(q, k, v, cfg, kleaf.shape[2])
     B, S = x.shape[0], x.shape[1]
     bidx = jnp.arange(B)
     page_ids = paged.tables[bidx[:, None], positions // ps]  # [B, S]
@@ -192,6 +216,8 @@ def _paged_decode(params, x, q, positions, seed, cfg: ModelConfig,
         out = paged_attention(q[:, 0], pool, paged.tables, lengths)[:, None]
     else:
         out = paged_attention(q, pool, paged.tables, lengths)
+    if tp_sharded:
+        out = jax.lax.all_gather(out, cfg.tp_axis, axis=2, tiled=True)
     return out, PagedKV(pool, paged.tables)
 
 
@@ -234,6 +260,7 @@ def attention(
         return L.dense(params["wo"], out, L.seed_fold(seed, 4), qc, method), new_cache
 
     new_cache = None
+    tp_sharded = False  # head-sharded KV cache under a shard_map tp axis
     if kv_cache is not None and cache_index is None and not write_kv:
         # reuse fully-precomputed KV (e.g. cached cross-attention memory)
         k, v = kv_cache
@@ -250,6 +277,11 @@ def attention(
             new_cache = (k, v)
         elif kv_cache is not None:  # decode/prefill: insert S new entries at index
             ck_, cv_ = kv_cache
+            # tp: a head-sharded dense cache (gather oracle under shard_map)
+            # announces itself by shape, exactly like the paged pool
+            tp_sharded = cfg.tp_axis is not None and ck_.shape[2] != nkv
+            if tp_sharded:
+                q, k, v = _tp_slice_heads(q, k, v, cfg, ck_.shape[2])
             upd = lambda c, n: jax.vmap(
                 lambda cb, nb, i: jax.lax.dynamic_update_slice(cb, nb, (i, 0, 0))
             )(c, n.astype(c.dtype), cache_index)
@@ -265,6 +297,8 @@ def attention(
         q, k, v, positions, causal=causal and kv_source is None,
         cfg=cfg, backend=backend, shared_mask=rows_shared,
     )
+    if tp_sharded:
+        out = jax.lax.all_gather(out, cfg.tp_axis, axis=2, tiled=True)
     out = out.reshape(*x.shape[:-1], nq * hd)
     out = L.dense(params["wo"], out, L.seed_fold(seed, 4), qc, method)
     return out, new_cache

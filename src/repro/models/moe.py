@@ -50,10 +50,18 @@ def init_moe_ffn(key, cfg: ModelConfig, dtype):
     return p
 
 
-def _expert_ffn(xe, params, seed, cfg: ModelConfig, method: str):
-    """xe: [E, T', D] → [E, T', D]; per-expert Quartet linears via vmap."""
+def _expert_ffn(xe, params, seed, cfg: ModelConfig, method: str,
+                expert_offset=0):
+    """xe: [E, T', D] → [E, T', D]; per-expert Quartet linears via vmap.
+
+    ``expert_offset`` shifts the per-expert stochastic-rounding seeds to the
+    *global* expert index — a tensor-parallel shard computing experts
+    [r·E/tp, (r+1)·E/tp) must fold the same seed that the unsharded run
+    folds for those experts, or quantization noise (and thus tokens) would
+    diverge between sharded and single-device engines."""
     qc = cfg.quartet
-    seeds = L.seed_fold(seed, 20) + jnp.arange(xe.shape[0], dtype=jnp.uint32)
+    seeds = (L.seed_fold(seed, 20) + expert_offset
+             + jnp.arange(xe.shape[0], dtype=jnp.uint32))
 
     if method == "quartet" and qc.fp4_allgather:
         # quantize the stacked expert weights BEFORE vmap so the FSDP gather
@@ -135,7 +143,26 @@ def moe_ffn(params, x, seed, cfg: ModelConfig, method: str = "quartet",
 
     # --- expert compute (E sharded over "model") ------------------------------
     xe = jnp.swapaxes(xe, 0, 1).reshape(E, G * min(c, g), D)
-    ye = _expert_ffn(xe, params, seed, cfg, method)
+    tp = (cfg.tp_size
+          if (cfg.tp_axis is not None and cfg.tp_size > 1
+              and E % cfg.tp_size == 0) else 1)
+    if tp > 1:
+        # expert parallelism inside a serving shard_map body: each shard runs
+        # its contiguous E/tp expert block (weights + dispatched tokens sliced
+        # on the expert axis), then all_gathers outputs back to the full
+        # expert axis — a pure concat, so the replicated combine below sums
+        # in exactly the single-device order.  Routing/capacity selection ran
+        # above on replicated inputs, so selection is shard-invariant.
+        r = jax.lax.axis_index(cfg.tp_axis)
+        El = E // tp
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, r * El, El, axis=0)
+        eparams = {**params, "gate": sl(params["gate"]),
+                   "up": sl(params["up"]), "down": sl(params["down"])}
+        ye = _expert_ffn(sl(xe), eparams, seed, cfg, method,
+                        expert_offset=(r * El).astype(jnp.uint32))
+        ye = jax.lax.all_gather(ye, cfg.tp_axis, axis=0, tiled=True)
+    else:
+        ye = _expert_ffn(xe, params, seed, cfg, method)
     ye = jnp.swapaxes(ye.reshape(E, G, min(c, g), D), 0, 1)  # [G, E, c, D]
     ye = ye * sel_gate[..., None].astype(ye.dtype)
 

@@ -3,7 +3,9 @@ cache, per-request sampling, speculative decoding, and built-in telemetry."""
 
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.paged_cache import DenseSlotCache, PagedCache, PagedKV
+from repro.serve.placement import Placement, ReplicaPlacer, ShardingConfig
 from repro.serve.prefix_cache import PrefixIndex
+from repro.serve.replica import ReplicatedEngine, make_engine
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec import SpecConfig
@@ -12,6 +14,11 @@ from repro.serve.telemetry import EngineTelemetry, MetricsRegistry, TelemetryCon
 __all__ = [
     "Engine",
     "EngineConfig",
+    "Placement",
+    "ReplicaPlacer",
+    "ReplicatedEngine",
+    "ShardingConfig",
+    "make_engine",
     "PagedCache",
     "PagedKV",
     "PrefixIndex",

@@ -74,6 +74,7 @@ import numpy as np
 
 from repro.models.registry import Model
 from repro.serve import paged_cache as P
+from repro.serve.placement import Placement, ShardingConfig
 from repro.serve.prefix_cache import PrefixIndex
 from repro.serve.sampling import SamplingParams, get_sampler
 from repro.serve.scheduler import Request, RequestState, Scheduler
@@ -130,10 +131,17 @@ class EngineConfig:
     # TelemetryConfig to stream JSONL metrics / traces, expose Prometheus
     # text, or sample pool quantization health at a tick stride.
     telemetry: TelemetryConfig | None = None
+    # multi-device serving (paged families only).  ``tp`` shards the pool /
+    # paged-attention / MoE experts over a ``('model',)`` mesh inside this
+    # engine's jitted steps; ``dp > 1`` is only honored by
+    # ``serve.replica.make_engine`` (data-parallel replicas) — constructing a
+    # bare Engine with dp > 1 raises.  Token-exact vs single-device.
+    sharding: ShardingConfig | None = None
 
 
 class Engine:
-    def __init__(self, model: Model, params, config: EngineConfig | None = None):
+    def __init__(self, model: Model, params, config: EngineConfig | None = None,
+                 *, placement: Placement | None = None, ids=None):
         self.model, self.params = model, params
         self.config = cfg = config or EngineConfig()
         self.paged = model.cfg.family in PAGED_FAMILIES
@@ -146,9 +154,20 @@ class Engine:
             raise ValueError(
                 f"prefix caching needs a paged family (dense/moe), "
                 f"got {model.cfg.family!r}")
+        if placement is None:
+            if cfg.sharding is not None and cfg.sharding.dp > 1:
+                raise ValueError(
+                    "dp > 1 needs data-parallel replicas — build via "
+                    "serve.replica.make_engine / ReplicatedEngine")
+            placement = Placement(cfg.sharding.tp if cfg.sharding else 1)
+        if placement.tp > 1 and not self.paged:
+            raise ValueError(
+                f"tensor-parallel serving needs a paged family (dense/moe), "
+                f"got {model.cfg.family!r}")
+        self.placement = placement
         self.telemetry = EngineTelemetry(cfg.telemetry)
         self.sched = Scheduler(cfg.n_slots, cfg.max_len, cfg.prefill_chunk,
-                               tracer=self.telemetry.tracer)
+                               tracer=self.telemetry.tracer, ids=ids)
         self.completed: list[Request] = []
         self._dtype = jnp.dtype(model.cfg.dtype)
         self.steps = 0
@@ -174,11 +193,19 @@ class Engine:
                 model, n_slots=cfg.n_slots, pages_per_slot=pages_per_slot,
                 page_size=cfg.page_size, n_pages=n_pages, kv_dtype=cfg.kv_dtype,
                 debug=cfg.debug_cache)
+            if placement.tp > 1:
+                # pool shards on the KV-head axis over the placement mesh;
+                # params replicate (serving TP = KV/attention/expert
+                # parallelism, not weight sharding — see serve/README.md)
+                self.cache.pool = placement.shard_pool(self.cache.pool)
+                self.params = placement.replicate(self.params)
             self.decode_backend = cfg.decode_backend or (
                 "paged" if model.cfg.attn_backend == "paged" else "gather")
             self._steps = build_paged_steps(
                 model, method=cfg.method, page_size=cfg.page_size,
-                n_layers=self.cache.layers, decode_backend=self.decode_backend)
+                n_layers=self.cache.layers, decode_backend=self.decode_backend,
+                placement=placement if placement.tp > 1 else None,
+                pool_example=self.cache.pool)
             self._decode_all = self._steps.decode_all
             self._prefill_chunk = self._steps.prefill_chunk
             self._verify_all = self._steps.verify_all

@@ -95,7 +95,7 @@ class Scheduler:
     dense slots)."""
 
     def __init__(self, n_slots: int, max_len: int, prefill_chunk: int = 16,
-                 tracer: Any = None):
+                 tracer: Any = None, ids=None):
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         self.n_slots, self.max_len = n_slots, max_len
@@ -104,7 +104,10 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}  # slot -> request
         self.free_slots = deque(range(n_slots))
-        self._ids = itertools.count()
+        # ``ids`` lets data-parallel engine replicas share one counter so
+        # rids stay globally unique (replica.ReplicatedEngine merges its
+        # replicas' completed lists back into rid order)
+        self._ids = ids if ids is not None else itertools.count()
 
     # -- submission ---------------------------------------------------------
 

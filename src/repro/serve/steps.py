@@ -105,10 +105,29 @@ def jit_cache_size(fn) -> int:
 
 
 def build_paged_steps(model: Model, *, method: str, page_size: int,
-                      n_layers: int, decode_backend: str = "paged") -> PagedSteps:
+                      n_layers: int, decode_backend: str = "paged",
+                      placement=None, pool_example=None) -> PagedSteps:
+    """``placement`` (serve.placement.Placement, tp > 1) makes every returned
+    step a ``jax.jit(shard_map(...))`` over the placement's ``('model',)``
+    mesh: the pool enters head-sharded (``pool_example`` supplies the leaf
+    shapes for the PartitionSpecs), everything else replicated, and the model
+    is rebuilt with ``cfg.tp_axis/tp_size`` set so its shape-based detection
+    slices heads/experts inside the shard_map body.  ``check_rep=False``
+    because GSPMD cannot see through the Pallas kernel; exactness is by
+    construction (slices + tiled all_gather concats, no reductions)."""
     if decode_backend not in ("paged", "gather"):
         raise ValueError(f"decode_backend must be 'paged' or 'gather', "
                          f"got {decode_backend!r}")
+    tp = placement.tp if placement is not None else 1
+    if tp > 1:
+        if pool_example is None:
+            raise ValueError("tp > 1 needs pool_example for pool PartitionSpecs")
+        import dataclasses
+
+        from repro.models.registry import build_model
+
+        model = build_model(dataclasses.replace(
+            model.cfg, tp_axis=type(placement).AXIS, tp_size=tp))
     decode = make_decode_step(model, method=method)
     chunk = make_chunk_prefill_step(model, method=method)
     verify = make_verify_step(model, method=method)
@@ -223,6 +242,31 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
         pos = start + jnp.arange(C)
         pool = P.scatter_tokens(pool, table_row[pos // ps], pos % ps, k_c, v_c)
         return logits, pool
+
+    if tp > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as PS
+
+        R = PS()  # replicated (pytree-prefix spec for params and scalars)
+        pspec = placement.pool_specs(pool_example)
+
+        def smap(fn, in_specs):
+            return jax.jit(shard_map(fn, mesh=placement.mesh,
+                                     in_specs=in_specs, out_specs=(R, pspec),
+                                     check_rep=False))
+
+        # pool position differs per step; everything else is replicated
+        decode_sm = smap(decode_all, (R, R, R, pspec, R, R))
+        verify_sm = smap(verify_all, (R, R, R, pspec, R, R))
+        chunk_sm = smap(lambda p, t, s, tr, pool, extra:
+                        prefill_chunk(p, t, s, tr, pool, extra),
+                        (R, R, R, R, pspec, R))
+        chunk_fn = lambda p, t, s, tr, pool, extra=None: chunk_sm(
+            p, t, s, tr, pool, extra)
+        if decode_backend == "paged":
+            prefill_sm = smap(prefill_all, (R, R, R, R, pspec, R, R))
+            return PagedSteps(decode_sm, chunk_fn, verify_sm, prefill_sm)
+        return PagedSteps(decode_sm, chunk_fn, verify_sm, None)
 
     if decode_backend == "paged":
         return PagedSteps(jax.jit(decode_all), jax.jit(prefill_chunk),

@@ -23,9 +23,21 @@ from repro.serve.telemetry.registry import METRICS_SCHEMA
 
 # v2: adds the "prefix" section (shared-prefix workload: hit rate, warm/cold
 # TTFT, prefill tok/s) — null-filled when the benchmark skips that section
-BENCH_SCHEMA = "repro.bench_serve/v2"
+# v3: adds the nullable "sharding" section (multi-device serving: TP parity +
+# TTFT/TPOT deltas, DP per-replica and aggregate tok/s, per-shard pool
+# bytes) — null when the run is single-device or lacks forced host devices
+BENCH_SCHEMA = "repro.bench_serve/v3"
 
 _NUM = numbers.Real
+
+
+class _Nullable:
+    """Wrap an object spec: the whole section may be ``null`` (e.g. the
+    ``sharding`` block on a single-device run), but when present it must
+    conform to the wrapped spec."""
+
+    def __init__(self, spec: dict):
+        self.spec = spec
 
 
 def _check(errors: list, doc: dict, path: str, spec: dict) -> None:
@@ -34,7 +46,15 @@ def _check(errors: list, doc: dict, path: str, spec: dict) -> None:
             errors.append(f"missing {path}{key}")
             continue
         v = doc[key]
-        if isinstance(want, dict):
+        if isinstance(want, _Nullable):
+            if v is None:
+                continue
+            if not isinstance(v, dict):
+                errors.append(f"{path}{key}: expected object|null, "
+                              f"got {type(v).__name__}")
+            else:
+                _check(errors, v, f"{path}{key}.", want.spec)
+        elif isinstance(want, dict):
             if not isinstance(v, dict):
                 errors.append(f"{path}{key}: expected object, got {type(v).__name__}")
             else:
@@ -107,6 +127,36 @@ _BENCH_SPEC = {
         "warm_prefill_tok_per_s": "num_or_null",
         "cold_prefill_tok_per_s": "num_or_null",
     },
+    # whole section is null when the run is single-device (tp==dp==1), the
+    # family is not paged, or the process has too few devices to shard
+    "sharding": _Nullable({
+        "tp": _NUM,
+        "dp": _NUM,
+        "devices": _NUM,
+        "single": {
+            "decode_tok_per_s": _NUM,
+            "ttft_p50_s": _NUM,
+            "tpot_p50_s": "num_or_null",
+            "wall_sec": _NUM,
+        },
+        "tp_run": _Nullable({
+            "decode_tok_per_s": _NUM,
+            "ttft_p50_s": _NUM,
+            "tpot_p50_s": "num_or_null",
+            "wall_sec": _NUM,
+            "pool_bytes_per_shard": _NUM,
+            "parity_vs_single": _NUM,  # 1.0 exact / 0.0 mismatch
+            "ttft_p50_delta_s": "num_or_null",
+            "tpot_p50_delta_s": "num_or_null",
+        }),
+        "dp_run": _Nullable({
+            "aggregate_decode_tok_per_s": _NUM,
+            "speedup_vs_one_replica": _NUM,
+            "parity_vs_single": _NUM,
+            "pool_bytes_per_shard": _NUM,
+            "wall_sec": _NUM,
+        }),
+    }),
 }
 
 

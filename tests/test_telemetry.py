@@ -299,6 +299,24 @@ def test_bench_validator():
     del doc["pool"]
     assert any("pool" in e for e in validate_bench(doc))
     assert validate_bench({"schema": BENCH_SCHEMA}) != []
+    # the sharding block is nullable as a whole (single-device runs) but
+    # must conform when present; nested tp_run/dp_run are nullable too
+    doc = st.make_bench_baseline(rep)
+    assert doc["sharding"] is None and validate_bench(doc) == []
+    doc["sharding"] = {
+        "tp": 2, "dp": 2, "devices": 8,
+        "single": {"decode_tok_per_s": 1.0, "ttft_p50_s": 0.1,
+                   "tpot_p50_s": None, "wall_sec": 0.5},
+        "tp_run": None,
+        "dp_run": {"aggregate_decode_tok_per_s": 2.0,
+                   "speedup_vs_one_replica": 2.0, "parity_vs_single": 1.0,
+                   "pool_bytes_per_shard": 1024, "wall_sec": 0.3},
+    }
+    assert validate_bench(doc) == []
+    doc["sharding"]["dp_run"]["parity_vs_single"] = None
+    assert any("parity_vs_single" in e for e in validate_bench(doc))
+    doc["sharding"] = "not-an-object"
+    assert any("object|null" in e for e in validate_bench(doc))
 
 
 # ---------------------------------------------------------------------------
