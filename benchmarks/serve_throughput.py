@@ -340,7 +340,7 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
           max_new: int = 8, n_slots: int = 4, verify_parity: bool = True,
           spec_k: int = 3, spec_proposer: str = "self",
           metrics_out: str | None = None, shared_prefix: bool = True,
-          tp: int = 1, dp: int = 1) -> dict:
+          tp: int = 1, dp: int = 1, profile_out: str | None = None) -> dict:
     from repro.launch.serve_engine import run_workload
     from repro.serve import Engine, EngineConfig, SpecConfig
     from repro.serve.spec import aggregate_stats
@@ -356,11 +356,14 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
     def run_config(kv, backend, spec=None, primary=False):
         # the primary (mxfp4/paged) configuration streams its registry
         # snapshots and samples pool quantization health every tick; the
-        # others keep the in-memory registry only (NullSink)
+        # others keep the in-memory registry only (NullSink).  --profile-out
+        # additionally records the primary run's Chrome trace (the per-call
+        # cost lowering happens during warmup, outside the timed region)
         tcfg = TelemetryConfig(
             metrics_path=metrics_out if primary else None,
             emit_every_ticks=5 if primary and metrics_out else 0,
-            quant_stride=1 if primary else 0)
+            quant_stride=1 if primary else 0,
+            profile_trace_path=profile_out if primary else None)
         eng = Engine(model, params, EngineConfig(
             n_slots=n_slots, max_len=64, page_size=16, kv_dtype=kv,
             prefill_chunk=16, decode_backend=backend, spec=spec,
@@ -415,6 +418,12 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
             "prefill_kv_bytes_per_chunk":
             prefill_kv_bytes_per_chunk(eng.cache, backend) if eng.paged else 0,
         }
+        if primary:
+            # per-phase device cost accounting: AOT-lower the engine's jitted
+            # steps AFTER the timed region and pair the HLO FLOPs/bytes with
+            # the measured phase wall-time histograms (schema v4 "profile")
+            from repro.serve.telemetry.profiling import profile_report
+            stats["profile"] = profile_report(eng, snap)
         if primary and snap["counters"]["quant_health_samples"]:
             stats["quant_health"] = {
                 "clip_fraction_k": rnd(g["kv_clip_fraction_k"], 6),
@@ -433,6 +442,8 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
                         ("mxfp4", "paged"), ("mxfp4", "gather")):
         stats, outputs[(kv, backend)] = run_config(
             kv, backend, primary=(kv == "mxfp4" and backend == "paged"))
+        if kv == "mxfp4" and backend == "paged":
+            report["profile"] = stats.pop("profile", None)
         if backend == "paged":  # primary numbers, keyed by cache dtype
             report[kv] = stats
         report["decode_backends"][f"{kv}/{backend}"] = {
@@ -609,6 +620,9 @@ def make_bench_baseline(rep: dict) -> dict:
         # null on single-device runs; the dict from _bench_sharded already
         # matches the schema's nullable "sharding" block
         "sharding": rep.get("sharding"),
+        # per-phase cost accounting of the primary run (profiling.py) —
+        # already shaped like the schema's nullable "profile" block
+        "profile": rep.get("profile"),
     }
 
 
@@ -738,6 +752,11 @@ def main():
                     help="stream the primary run's registry snapshots as "
                          "JSON-lines to this path (smoke default: "
                          "benchmarks/out/metrics_serve.jsonl)")
+    ap.add_argument("--profile-out", default=None,
+                    help="write the primary run's Chrome trace-event JSON "
+                         "(open in Perfetto / chrome://tracing) to this "
+                         "path (smoke default: benchmarks/out/"
+                         "trace_serve.json)")
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where to write the schema-versioned benchmark "
                          "baseline ('' to skip)")
@@ -745,15 +764,17 @@ def main():
     if args.smoke:
         args.reduced, args.requests, args.max_new, args.slots = True, 4, 4, 2
         args.shared_prefix = True
+        out_dir = REPO_ROOT / "benchmarks" / "out"
+        out_dir.mkdir(parents=True, exist_ok=True)
         if args.metrics_out is None:
-            out_dir = REPO_ROOT / "benchmarks" / "out"
-            out_dir.mkdir(parents=True, exist_ok=True)
             args.metrics_out = str(out_dir / "metrics_serve.jsonl")
+        if args.profile_out is None:
+            args.profile_out = str(out_dir / "trace_serve.json")
     rep = bench(args.arch, args.reduced, args.requests, args.max_new,
                 args.slots, verify_parity=not args.no_parity,
                 spec_k=args.spec_k, spec_proposer=args.spec_proposer,
                 metrics_out=args.metrics_out, shared_prefix=args.shared_prefix,
-                tp=args.tp, dp=args.dp)
+                tp=args.tp, dp=args.dp, profile_out=args.profile_out)
     print(json.dumps(rep, indent=2))
     if (args.tp > 1 or args.dp > 1) and rep.get("sharding") is None:
         print(f"sharding section skipped: {args.tp * args.dp} devices needed, "
@@ -778,6 +799,24 @@ def main():
         assert qh is not None, "quant health never sampled on the mxfp4 pool"
         assert qh["scale_hist_nonzero_bins"] >= 1
         assert qh["clip_fraction_k"] is not None and qh["clip_fraction_k"] >= 0
+        # per-phase cost accounting: the paged primary run must produce a
+        # non-null profile block with real decode FLOPs/bytes and a
+        # utilization in (0, 1] territory (interpret-mode caveat: the Pallas
+        # kernel's internals are undercounted, never zero)
+        prof = rep.get("profile")
+        assert prof is not None, "profile block missing on a paged family"
+        assert prof["decode"] is not None
+        assert prof["decode"]["flops_per_call"] > 0
+        assert prof["decode"]["hbm_bytes_per_call"] > 0
+        assert prof["decode"]["roofline_util_mean"] > 0
+        # the Chrome trace must load structurally and carry tick-phase,
+        # request-lifecycle, and compile events
+        if args.profile_out:
+            from repro.serve.telemetry.profiling import validate_trace_file
+            tdoc = validate_trace_file(args.profile_out)
+            cats = {e.get("cat") for e in tdoc["traceEvents"]}
+            assert {"tick", "phase", "request"} <= cats, \
+                f"trace missing span categories: {cats}"
         # the persisted baseline must round-trip its schema validator
         doc = validate_bench_file(args.bench_out)
         assert doc["spec"]["acceptance_rate"] is None or \

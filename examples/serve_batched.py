@@ -56,6 +56,10 @@ def main():
                     help="stream telemetry snapshots as JSON-lines here")
     ap.add_argument("--trace-out", default=None,
                     help="write per-request span traces as JSON-lines here")
+    ap.add_argument("--profile-out", default=None,
+                    help="profile the run: roofline/bandwidth gauges + a "
+                         "Chrome trace-event JSON written here (open in "
+                         "Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
     cfg = get_reduced_config(args.arch)
@@ -72,6 +76,7 @@ def main():
         prefill_chunk=8, prefix_cache=args.prefix_cache, spec=spec,
         telemetry=TelemetryConfig(metrics_path=args.metrics_out,
                                   trace_path=args.trace_out,
+                                  profile_trace_path=args.profile_out,
                                   quant_stride=4)))
 
     # mixed prompt lengths, arrivals staggered over the first steps
@@ -114,7 +119,8 @@ def main():
               f"{c('prefix_shared_tokens').value} prompt tokens aliased, "
               f"{c('prefix_cow_pages').value} COW pages, "
               f"{engine.prefix.cached_pages()} pages cached")
-    for label, path in (("metrics", args.metrics_out), ("traces", args.trace_out)):
+    for label, path in (("metrics", args.metrics_out), ("traces", args.trace_out),
+                        ("profile trace", args.profile_out)):
         if path:
             print(f"{label} → {path}")
     if spec is not None:

@@ -133,6 +133,11 @@ def main():
     ap.add_argument("--quant-stride", type=int, default=0,
                     help="sample MXFP4 pool clip/scale health every N ticks "
                          "(0 = off)")
+    ap.add_argument("--profile-out", default=None,
+                    help="profile the run: per-phase roofline/bandwidth "
+                         "gauges + a Chrome trace-event JSON (tick-phase "
+                         "spans, request lifecycles, jit-compile events) "
+                         "written here — open in Perfetto/chrome://tracing")
     args = ap.parse_args()
 
     cfg = (get_reduced_config(args.arch) if args.reduced else get_config(args.arch))
@@ -157,7 +162,8 @@ def main():
 
     telemetry = TelemetryConfig(metrics_path=args.metrics_out,
                                 trace_path=args.trace_out,
-                                quant_stride=args.quant_stride)
+                                quant_stride=args.quant_stride,
+                                profile_trace_path=args.profile_out)
     with activate_mesh(make_local_mesh()):
         engine = Engine(model, params, EngineConfig(
             n_slots=args.slots, max_len=args.max_len, page_size=args.page_size,
@@ -182,7 +188,8 @@ def main():
         print(f"  spec: {agg['tokens_per_decode_call']} tok/verify-call, "
               f"acceptance {agg['acceptance_rate']} "
               f"({agg['drafts_accepted']}/{agg['drafts_proposed']} drafts)")
-    for label, path in (("metrics", args.metrics_out), ("traces", args.trace_out)):
+    for label, path in (("metrics", args.metrics_out), ("traces", args.trace_out),
+                        ("profile trace", args.profile_out)):
         if path:
             print(f"  {label} → {path}")
 

@@ -298,7 +298,7 @@ class Engine:
                 self._advance_prefill(req, now)
                 did_prefill = True
         if did_prefill:
-            reg.histogram("prefill_tick_s").observe(time.perf_counter() - t0)
+            self.telemetry.phase("prefill", now, t_tick, t0, time.perf_counter())
 
         # -- one batched decode/verify over all decoding slots ---------------
         decoding = self.sched.decoding()
@@ -306,10 +306,12 @@ class Engine:
             t0 = time.perf_counter()
             if self.spec is not None:
                 self._spec_tick(decoding, now)
-                reg.histogram("verify_tick_s").observe(time.perf_counter() - t0)
+                self.telemetry.phase("verify", now, t_tick, t0,
+                                     time.perf_counter())
             else:
                 self._decode_tick(decoding, now)
-                reg.histogram("decode_tick_s").observe(time.perf_counter() - t0)
+                self.telemetry.phase("decode", now, t_tick, t0,
+                                     time.perf_counter())
 
         self.steps += 1
         self.telemetry.end_tick(self, now, time.perf_counter() - t_tick)

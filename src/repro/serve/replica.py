@@ -17,9 +17,17 @@ cross-replica machinery is host-side:
   step concurrently in real deployments, so aggregate throughput is
   ``total tokens / max(busy_s)`` (the critical-path replica), which is what
   the benchmark reports;
-* **telemetry** — ``aggregate_telemetry`` merges registry snapshots:
-  counters sum, ``*_peak`` gauges take the max, ``*_watermark`` gauges the
-  min, other gauges the mean.
+* **telemetry** — ``aggregate_telemetry`` merges the per-replica registries
+  (``registry.merge_registries``): counters sum, ``*_peak`` gauges take the
+  max, ``*_watermark`` gauges the min, other gauges the mean — and
+  histograms POOL their sample reservoirs and cumulative buckets, so
+  DP-aggregate TTFT/TPOT percentiles are computed over all replicas'
+  samples (averaging per-replica percentiles would be statistically wrong);
+* **profiling** — with ``TelemetryConfig.profile_trace_path`` set, each
+  replica records its own trace lane (``pid`` = replica index) and
+  :meth:`ReplicatedEngine.write_profile` merges them into one
+  Perfetto-loadable document (per-replica engines get the path stripped so
+  they don't clobber each other's files).
 
 Exactness: a request's tokens depend only on its own replica's engine, and
 every replica is token-exact vs a single-device engine (the TP contract), so
@@ -68,14 +76,26 @@ class ReplicatedEngine:
         tp, dp = sharding.tp, sharding.dp
         meshes = make_serve_meshes(tp, dp)
         ids = itertools.count()  # shared → globally-unique rids
-        # replicas get a dp-stripped config: each Engine validates tp only
+        # replicas get a dp-stripped config: each Engine validates tp only.
+        # A shared profile trace path is also stripped (replicas would
+        # clobber one file) — write_profile() merges the per-replica lanes.
         import dataclasses
         rep_cfg = dataclasses.replace(config, sharding=None)
+        self.profile_trace_path = None
+        tel = rep_cfg.telemetry
+        if tel is not None and tel.profile_trace_path:
+            self.profile_trace_path = tel.profile_trace_path
+            rep_cfg = dataclasses.replace(
+                rep_cfg, telemetry=dataclasses.replace(
+                    tel, profile_trace_path=None, profile=True))
         self.engines = [
             Engine(model, params, rep_cfg,
                    placement=Placement(tp, mesh=m), ids=ids)
             for m in meshes
         ]
+        for r, e in enumerate(self.engines):
+            if e.telemetry.profiler is not None:
+                e.telemetry.profiler.pid = r
         self.placer = ReplicaPlacer(dp)
         self.busy_s = [0.0] * dp
         self.sched = _SchedView(self.engines)
@@ -136,26 +156,36 @@ class ReplicatedEngine:
         return sum(e.cache_bytes() for e in self.engines)
 
     def aggregate_telemetry(self) -> dict:
-        """One merged snapshot across replicas: counters sum; gauges ending
-        ``_peak`` take the max, ``_watermark`` the min, anything else the
-        mean over the replicas that reported it."""
-        snaps = [e.telemetry.registry.snapshot() for e in self.engines]
-        agg: dict = {"replicas": len(snaps), "counters": {}, "gauges": {}}
-        for s in snaps:
-            for name, v in s["counters"].items():
-                agg["counters"][name] = agg["counters"].get(name, 0) + v
-        gauge_vals: dict[str, list] = {}
-        for s in snaps:
-            for name, v in s["gauges"].items():
-                gauge_vals.setdefault(name, []).append(v)
-        for name, vs in gauge_vals.items():
-            if name.endswith("_peak"):
-                agg["gauges"][name] = max(vs)
-            elif name.endswith("_watermark"):
-                agg["gauges"][name] = min(vs)
-            else:
-                agg["gauges"][name] = sum(vs) / len(vs)
+        """One merged snapshot across replicas via
+        :func:`~repro.serve.telemetry.registry.merge_registries`: counters
+        sum; gauges ending ``_peak`` take the max, ``_watermark`` the min,
+        anything else the mean; histograms pool reservoirs and buckets so
+        the aggregate percentiles are over all replicas' samples; binned
+        counts add; EWMA rates sum.  Carries the full snapshot sections
+        (histograms/binned/rates included — they used to be dropped)."""
+        from repro.serve.telemetry.registry import merge_registries
+        merged = merge_registries([e.telemetry.registry for e in self.engines])
+        agg = merged.snapshot()
+        agg["replicas"] = len(self.engines)
         return agg
+
+    def write_profile(self, path: str | None = None) -> str | None:
+        """Finalize every replica's profiler (folding its completed request
+        traces in) and write ONE merged Chrome-trace document with a
+        process lane per replica.  Returns the path written, or ``None``
+        when profiling is off."""
+        from repro.serve.telemetry.profiling import write_trace
+        path = path or self.profile_trace_path
+        sinks = []
+        for e in self.engines:
+            prof = e.telemetry.profiler
+            if prof is not None:
+                prof.finalize(e.telemetry.tracer)
+                sinks.append(prof.sink)
+        if not sinks or path is None:
+            return None
+        write_trace(path, sinks)
+        return path
 
 
 def make_engine(model: Model, params, config: EngineConfig | None = None):

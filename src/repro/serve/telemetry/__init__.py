@@ -68,6 +68,8 @@ class TelemetryConfig:
     quant_stride: int = 0                # pool-health sample every N ticks (0=off)
     keep_traces: int = 1024              # completed traces retained in memory
     hist_max_samples: int = 4096         # percentile reservoir size
+    profile: bool = False                # per-phase cost accounting + roofline gauges
+    profile_trace_path: str | None = None  # Chrome trace-event JSON (implies profile)
 
 
 # name → (kind, help).  Pre-registered so every snapshot carries the full
@@ -122,6 +124,26 @@ CATALOG: dict[str, tuple[str, str]] = {
     "jit_compiled_prefill_all": ("gauge", "compiled variants of prefill_all"),
     "jit_compiled_prefill_chunk": ("gauge", "compiled variants of prefill_chunk"),
     "jit_compiled_verify_all": ("gauge", "compiled variants of verify_all"),
+    # gauges — profiler cost accounting (0 unless TelemetryConfig.profile;
+    # per-call costs are static HLO facts, util/bw refresh every profiled tick)
+    "profile_flops_per_call_prefill": ("gauge", "HLO flops per prefill call"),
+    "profile_flops_per_call_decode": ("gauge", "HLO flops per decode call"),
+    "profile_flops_per_call_verify": ("gauge", "HLO flops per verify call"),
+    "profile_hbm_bytes_per_call_prefill": ("gauge",
+                                           "HLO HBM-traffic proxy per prefill call"),
+    "profile_hbm_bytes_per_call_decode": ("gauge",
+                                          "HLO HBM-traffic proxy per decode call"),
+    "profile_hbm_bytes_per_call_verify": ("gauge",
+                                          "HLO HBM-traffic proxy per verify call"),
+    "roofline_util_prefill": ("gauge",
+                              "achieved/peak FLOP rate, last prefill section"),
+    "roofline_util_decode": ("gauge",
+                             "achieved/peak FLOP rate, last decode section"),
+    "roofline_util_verify": ("gauge",
+                             "achieved/peak FLOP rate, last verify section"),
+    "effective_bw_prefill": ("gauge", "HBM-proxy bytes/s, last prefill section"),
+    "effective_bw_decode": ("gauge", "HBM-proxy bytes/s, last decode section"),
+    "effective_bw_verify": ("gauge", "HBM-proxy bytes/s, last verify section"),
     # gauges — quantization health (mxfp4 pools, sampled at quant_stride)
     "kv_clip_fraction_k": ("gauge", "E2M1 codes at |6.0| in mapped K pages"),
     "kv_clip_fraction_v": ("gauge", "E2M1 codes at |6.0| in mapped V pages"),
@@ -179,9 +201,14 @@ class EngineTelemetry:
             self.sinks.append(ConsoleSink(self.cfg.console_every))
         if not self.sinks:
             self.sinks.append(NullSink())
+        self.profiler = None  # EngineProfiler, created at attach() when enabled
         self._last_now = 0.0
         self._last_tokens = 0
         self._finalized = False
+
+    @property
+    def profiling(self) -> bool:
+        return bool(self.cfg.profile or self.cfg.profile_trace_path)
 
     # -- engine lifecycle ---------------------------------------------------
 
@@ -205,6 +232,32 @@ class EngineTelemetry:
             g("pool_pages_total").set(total)
             g("pool_pages_free").set(engine.cache.free_pages)
             g("pool_pages_free_watermark").set(engine.cache.free_pages)
+        # seed compile-count gauges so the profiler's compile-event diffing
+        # doesn't re-announce warmup compiles after a post-warmup reset
+        for name, count in engine.compile_counts().items():
+            g(f"jit_compiled_{name}").set(count)
+        if self.profiling:
+            from repro.serve.telemetry.profiling import EngineProfiler
+            old = self.profiler
+            self.profiler = EngineProfiler(
+                engine, self.registry, trace_path=self.cfg.profile_trace_path,
+                pid=old.pid if old is not None else 0)
+            if old is not None and old.engine is engine:
+                # re-attach after reset(): drop the warmup trace but keep the
+                # memoized step costs (pure functions of the engine's avals)
+                self.profiler._costs = old._costs
+
+    def phase(self, name: str, now: float, tick_t0: float,
+              t0: float, t1: float) -> None:
+        """One phase section of a tick finished.  ``tick_t0``/``t0``/``t1``
+        are ``perf_counter`` readings (tick entry / section start / section
+        end); ``now`` is the engine clock at tick entry — the profiler places
+        the span at ``now + (t0 - tick_t0)`` so traces and request spans
+        share one clock.  With profiling off this is exactly the histogram
+        observe the engine used to do inline."""
+        self.registry.histogram(f"{name}_tick_s").observe(t1 - t0)
+        if self.profiler is not None:
+            self.profiler.on_phase(name, now + (t0 - tick_t0), t1 - t0)
 
     def end_tick(self, engine, now: float, wall_s: float) -> None:
         reg = self.registry
@@ -231,7 +284,12 @@ class EngineTelemetry:
                     g("prefix_hit_rate").set(
                         reg.counter("prefix_hit_requests").value / lookups)
         for name, count in engine.compile_counts().items():
-            g(f"jit_compiled_{name}").set(count)
+            gauge = g(f"jit_compiled_{name}")
+            if self.profiler is not None and count > gauge.value:
+                self.profiler.compile_event(name, now, count)
+            gauge.set(count)
+        if self.profiler is not None:
+            self.profiler.on_tick(engine, now, wall_s)
         toks = reg.counter("tokens_generated").value
         reg.rate("tokens_per_sec_ewma").mark(toks - self._last_tokens,
                                              time.perf_counter())
@@ -280,6 +338,8 @@ class EngineTelemetry:
         snap = self.emit(t)
         for sink in self.sinks:
             sink.close()
+        if self.profiler is not None:
+            self.profiler.finalize(self.tracer)
         self.tracer.close()
         self._finalized = True
         return snap

@@ -26,11 +26,20 @@ baseline both derive from it) and Prometheus text exposition
 
 from __future__ import annotations
 
+import bisect
 import math
 from collections import deque
 from typing import Iterable
 
 METRICS_SCHEMA = "repro.serve_metrics/v1"
+
+# Cumulative-bucket ladder for the Prometheus exposition: log-spaced seconds
+# covering everything we observe (10 µs ticks up to minute-scale request
+# latencies; `tokens_per_decode_call` values land in the 1..32 decades).
+DEFAULT_BUCKETS: tuple[float, ...] = (
+    1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3,
+    1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
 
 
 class Counter:
@@ -69,15 +78,20 @@ class Gauge:
 
 class Histogram:
     kind = "histogram"
-    __slots__ = ("help", "count", "total", "vmin", "vmax", "_buf")
+    __slots__ = ("help", "count", "total", "vmin", "vmax", "_buf",
+                 "buckets", "bucket_counts")
 
-    def __init__(self, help: str = "", max_samples: int = 4096):
+    def __init__(self, help: str = "", max_samples: int = 4096,
+                 buckets: tuple[float, ...] = DEFAULT_BUCKETS):
         self.help = help
         self.count = 0
         self.total = 0.0
         self.vmin = math.inf
         self.vmax = -math.inf
         self._buf: deque[float] = deque(maxlen=max_samples)
+        # non-cumulative per-bucket counts; index len(buckets) is +Inf
+        self.buckets = tuple(buckets)
+        self.bucket_counts = [0] * (len(self.buckets) + 1)
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -86,6 +100,7 @@ class Histogram:
         self.vmin = min(self.vmin, v)
         self.vmax = max(self.vmax, v)
         self._buf.append(v)
+        self.bucket_counts[bisect.bisect_left(self.buckets, v)] += 1
 
     def percentile(self, q: float) -> float | None:
         """numpy-compatible linear interpolation over the retained samples
@@ -249,7 +264,7 @@ class MetricsRegistry:
             elif isinstance(m, Gauge):
                 fresh[name] = Gauge(m.help)
             elif isinstance(m, Histogram):
-                fresh[name] = Histogram(m.help, m._buf.maxlen)
+                fresh[name] = Histogram(m.help, m._buf.maxlen, m.buckets)
             elif isinstance(m, BinnedHistogram):
                 fresh[name] = BinnedHistogram(m.n_bins, m.help)
             elif isinstance(m, EwmaRate):
@@ -293,11 +308,12 @@ class MetricsRegistry:
                 lines.append(f"# TYPE {name} gauge")
                 lines.append(f"{name} {(m.rate or 0.0):g}")
             elif isinstance(m, Histogram):
-                lines.append(f"# TYPE {name} summary")
-                for q in (0.5, 0.95, 0.99):
-                    v = m.percentile(q)
-                    if v is not None:
-                        lines.append(f'{name}{{quantile="{q}"}} {v:g}')
+                lines.append(f"# TYPE {name} histogram")
+                cum = 0
+                for bound, c in zip(m.buckets, m.bucket_counts):
+                    cum += c
+                    lines.append(f'{name}_bucket{{le="{bound:g}"}} {cum}')
+                lines.append(f'{name}_bucket{{le="+Inf"}} {m.count}')
                 lines.append(f"{name}_sum {m.total:g}")
                 lines.append(f"{name}_count {m.count}")
             elif isinstance(m, BinnedHistogram):
@@ -310,3 +326,79 @@ class MetricsRegistry:
                 lines.append(f'{name}_bucket{{le="+Inf"}} {sum(m.counts)}')
                 lines.append(f"{name}_count {sum(m.counts)}")
         return "\n".join(lines) + "\n"
+
+
+def merge_histograms(hists: list[Histogram]) -> Histogram:
+    """Pool histograms sample-by-sample: counts/sums add, extrema combine,
+    reservoirs concatenate (into a reservoir big enough to keep everything
+    the sources retained), bucket counts add elementwise.  Percentiles of
+    the merge are therefore computed over the POOLED samples — the
+    statistically meaningful DP aggregate — not averaged per-source."""
+    if not hists:
+        raise ValueError("nothing to merge")
+    first = hists[0]
+    for h in hists[1:]:
+        if h.buckets != first.buckets:
+            raise ValueError("cannot merge histograms with different buckets")
+    out = Histogram(first.help,
+                    max_samples=max(1, sum(h._buf.maxlen for h in hists)),
+                    buckets=first.buckets)
+    for h in hists:
+        out.count += h.count
+        out.total += h.total
+        out.vmin = min(out.vmin, h.vmin)
+        out.vmax = max(out.vmax, h.vmax)
+        out._buf.extend(h._buf)
+        for i, c in enumerate(h.bucket_counts):
+            out.bucket_counts[i] += c
+    return out
+
+
+def merge_registries(regs: list[MetricsRegistry]) -> MetricsRegistry:
+    """Merge per-replica registries into one aggregate view (data-parallel
+    serving: replicas handle disjoint traffic concurrently).
+
+    * counters — summed,
+    * gauges — ``*_peak``/``*_watermark`` keep their extreme (max / min
+      respectively), everything else averages across replicas,
+    * histograms — pooled via :func:`merge_histograms` (reservoirs and
+      cumulative buckets concatenated/added, so aggregate percentiles are
+      over all replicas' samples),
+    * binned histograms — counts added elementwise,
+    * EWMA rates — summed (replicas emit tokens concurrently).
+
+    Metric names are unioned; a metric missing from some replicas merges
+    over the replicas that have it.
+    """
+    if not regs:
+        raise ValueError("nothing to merge")
+    out = MetricsRegistry(hist_max_samples=regs[0]._hist_max_samples)
+    out.meta = dict(regs[0].meta)
+    out.meta["replicas"] = len(regs)
+    names: dict[str, object] = {}
+    for reg in regs:
+        for name, m in reg._metrics.items():
+            names.setdefault(name, m)
+    for name, proto in sorted(names.items()):
+        ms = [reg._metrics[name] for reg in regs if name in reg._metrics]
+        if isinstance(proto, Counter):
+            out.counter(name, proto.help).inc(sum(m.value for m in ms))
+        elif isinstance(proto, Gauge):
+            g = out.gauge(name, proto.help)
+            if name.endswith("_peak"):
+                g.set(max(m.value for m in ms))
+            elif name.endswith("_watermark"):
+                g.set(min(m.value for m in ms))
+            else:
+                g.set(sum(m.value for m in ms) / len(ms))
+        elif isinstance(proto, Histogram):
+            out._metrics[name] = merge_histograms(ms)
+        elif isinstance(proto, BinnedHistogram):
+            b = out.binned(name, proto.n_bins, proto.help)
+            for m in ms:
+                b.merge_counts(m.counts)
+        elif isinstance(proto, EwmaRate):
+            r = out.rate(name, proto.halflife_s, proto.help)
+            rates = [m.rate for m in ms if m.rate is not None]
+            r._rate = sum(rates) if rates else None
+    return out

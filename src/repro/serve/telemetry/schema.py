@@ -26,7 +26,11 @@ from repro.serve.telemetry.registry import METRICS_SCHEMA
 # v3: adds the nullable "sharding" section (multi-device serving: TP parity +
 # TTFT/TPOT deltas, DP per-replica and aggregate tok/s, per-shard pool
 # bytes) — null when the run is single-device or lacks forced host devices
-BENCH_SCHEMA = "repro.bench_serve/v3"
+# v4: adds the nullable "profile" section (per-phase HLO cost accounting
+# from telemetry.profiling: FLOPs / HBM-proxy bytes per jitted call, mean
+# roofline utilization and effective bandwidth over the primary run) — null
+# when no step could be cost-accounted
+BENCH_SCHEMA = "repro.bench_serve/v4"
 
 _NUM = numbers.Real
 
@@ -156,6 +160,23 @@ _BENCH_SPEC = {
             "pool_bytes_per_shard": _NUM,
             "wall_sec": _NUM,
         }),
+    }),
+    # per-phase device cost accounting of the primary (mxfp4+paged) run;
+    # each phase block is null when that phase never ran (e.g. "verify"
+    # without speculation) and the whole section null when nothing lowered
+    "profile": _Nullable({
+        "peak_flops": _NUM,
+        "peak_bw": _NUM,
+        "prefill": _Nullable(_PROFILE_PHASE_SPEC := {
+            "flops_per_call": _NUM,
+            "hbm_bytes_per_call": _NUM,
+            "calls": _NUM,
+            "wall_s": _NUM,
+            "roofline_util_mean": "num_or_null",
+            "effective_bw_mean": "num_or_null",
+        }),
+        "decode": _Nullable(_PROFILE_PHASE_SPEC),
+        "verify": _Nullable(_PROFILE_PHASE_SPEC),
     }),
 }
 

@@ -230,3 +230,53 @@ def test_replicated_engine_unique_rids_and_merge_order():
     rids = [r.rid for r in eng.completed]
     assert rids == sorted(rids) and len(set(rids)) == len(rids)
     assert {getattr(r, "replica", None) for r in eng.completed} <= {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# DP telemetry aggregation + merged profile trace
+# ---------------------------------------------------------------------------
+
+
+@needs2
+def test_dp_aggregate_pools_histograms_and_merges_trace(tmp_path):
+    from repro.serve import TelemetryConfig
+    from repro.serve.telemetry.profiling import validate_trace_file
+
+    cfg, model, params = _setup("qwen3-1.7b")
+    eng = make_engine(model, params, EngineConfig(
+        n_slots=2, max_len=64, page_size=8, kv_dtype="mxfp4", prefill_chunk=8,
+        sharding=ShardingConfig(tp=1, dp=2),
+        telemetry=TelemetryConfig(
+            profile_trace_path=str(tmp_path / "dp_trace.json"))))
+    assert isinstance(eng, ReplicatedEngine)
+    for p in _prompts(cfg):
+        eng.submit(p, 8, arrival_time=0.0)
+    eng.drain()
+    assert all(e.completed for e in eng.engines)  # placer spread the work
+
+    agg = eng.aggregate_telemetry()
+    regs = [e.telemetry.registry for e in eng.engines]
+    assert agg["replicas"] == 2
+    # counters sum across replicas
+    assert agg["counters"]["engine_ticks"] == sum(
+        r.counter("engine_ticks").value for r in regs)
+    assert agg["counters"]["decode_calls"] == sum(
+        r.counter("decode_calls").value for r in regs)
+    # histograms are POOLED, not dropped (the old aggregate carried only
+    # counters + a few gauges): aggregate counts/sums span both replicas
+    for hname in ("tick_s", "decode_tick_s", "ttft_s"):
+        per = [r.histogram(hname) for r in regs]
+        assert agg["histograms"][hname]["count"] == sum(h.count for h in per)
+        assert agg["histograms"][hname]["sum"] == pytest.approx(
+            sum(h.total for h in per))
+    assert agg["histograms"]["tick_s"]["count"] > 0
+    # profiler gauges averaged across replicas, nonzero with profiling on
+    assert agg["gauges"]["roofline_util_decode"] > 0
+
+    # one merged Perfetto document: a process lane per replica
+    path = eng.write_profile()
+    doc = validate_trace_file(path)
+    payload = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert {e["pid"] for e in payload} == {0, 1}
+    cats = {e.get("cat") for e in payload}
+    assert {"tick", "phase", "request"} <= cats

@@ -32,7 +32,7 @@ from repro.serve import Engine, EngineConfig, SamplingParams, TelemetryConfig
 from repro.serve.sampling import _COMPILED, get_sampler
 from repro.serve.telemetry import CATALOG, EngineTelemetry
 from repro.serve.telemetry.registry import (EwmaRate, Histogram,
-                                            MetricsRegistry)
+                                            MetricsRegistry, merge_registries)
 from repro.serve.telemetry.schema import (BENCH_SCHEMA, validate_bench,
                                           validate_metrics_file,
                                           validate_snapshot)
@@ -153,6 +153,67 @@ def test_registry_reset_preserves_schema():
     assert reg.names() == names_before
     assert reg.counter("c").value == 0
     assert reg.histogram("h").count == 0
+
+
+def test_prometheus_histogram_cumulative_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s", "latency")
+    for v in (0.0001, 0.003, 0.003, 0.7, 120.0):  # 120 > last bound → +Inf
+        h.observe(v)
+    text = reg.prometheus_text()
+    assert "# TYPE lat_s histogram" in text
+    # le-labelled buckets are CUMULATIVE (each includes everything below)
+    assert 'lat_s_bucket{le="0.0001"} 1' in text
+    assert 'lat_s_bucket{le="0.0025"} 1' in text
+    assert 'lat_s_bucket{le="0.005"} 3' in text   # the two 3ms samples joined
+    assert 'lat_s_bucket{le="1"} 4' in text
+    assert 'lat_s_bucket{le="60"} 4' in text      # 120s overflows every bound
+    assert 'lat_s_bucket{le="+Inf"} 5' in text    # +Inf always equals _count
+    assert "lat_s_sum 120.706" in text  # %g, 6 sig figs
+    assert "lat_s_count 5" in text
+    # boundary semantics: observe(bound) lands in that bound's bucket (le=)
+    reg2 = MetricsRegistry()
+    reg2.histogram("x").observe(0.005)
+    assert 'x_bucket{le="0.005"} 1' in reg2.prometheus_text()
+
+
+def test_merge_registries_pools_histograms():
+    regs = [MetricsRegistry() for _ in range(3)]
+    for i, reg in enumerate(regs):
+        reg.counter("engine_ticks").inc(10 * (i + 1))
+        reg.gauge("pool_occupancy").set(0.2 * (i + 1))
+        reg.gauge("pool_occupancy_peak").set(0.3 * (i + 1))
+        reg.gauge("pool_pages_free_watermark").set(10.0 - i)
+        for v in np.linspace(0.01 * (i + 1), 0.05 * (i + 1), 20):
+            reg.histogram("tick_s").observe(float(v))
+    merged = merge_registries(regs)
+    assert merged.meta["replicas"] == 3
+    assert merged.counter("engine_ticks").value == 60
+    assert merged.gauge("pool_occupancy").value == pytest.approx(0.4)  # mean
+    assert merged.gauge("pool_occupancy_peak").value == pytest.approx(0.9)
+    assert merged.gauge("pool_pages_free_watermark").value == pytest.approx(8.0)
+    # histograms are POOLED, not averaged: percentiles computed over the
+    # union of all replicas' samples — the previous aggregate dropped them
+    h = merged.histogram("tick_s")
+    allv = np.concatenate([np.linspace(0.01 * (i + 1), 0.05 * (i + 1), 20)
+                           for i in range(3)])
+    assert h.count == 60
+    assert h.summary()["sum"] == pytest.approx(allv.sum())
+    assert h.vmin == pytest.approx(allv.min())
+    assert h.vmax == pytest.approx(allv.max())
+    for q in (0.5, 0.95):
+        assert h.percentile(q) == pytest.approx(np.quantile(allv, q))
+    # cumulative bucket counts add elementwise
+    assert sum(h.bucket_counts) == 60
+    # a metric present on only some replicas merges over those that have it
+    regs[0].counter("only_here").inc(7)
+    assert merge_registries(regs).counter("only_here").value == 7
+    # mismatched bucket layouts refuse to pool silently
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.histogram("h")
+    b._metrics["h"] = Histogram(buckets=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        merge_registries([a, b])
 
 
 # ---------------------------------------------------------------------------
