@@ -23,6 +23,12 @@ JSON report:
   (warm) vs the non-sharing engine (cold) — prefix hit rate, shared tokens,
   COW pages, prefill tok/s and mean/p95 TTFT cold-vs-warm, with warm-vs-cold
   token parity and pool page-conservation (no leaks) asserted,
+* a state-pool family A/B (``families`` section, ``--family ARCH``,
+  repeatable / ``--smoke``): each non-attention arch (ssm / hybrid /
+  enc-dec / VLM) through the unified StatePool engine vs the dense-slot
+  oracle — token parity (dense planes, asserted exact), pooled vs oracle
+  decode tok/s, and per-decode-step state-byte traffic of the packed
+  planes vs the oracle's dense per-slot caches,
 * a multi-device A/B (``sharding`` section, ``--tp`` / ``--dp``): the
   TP-sharded engine (packed pool + paged-attention grid sharded over KV
   heads on the ``model`` mesh axis) and the DP-replicated engine
@@ -223,6 +229,67 @@ def _bench_shared_prefix(model, cfg, params, n_requests: int, n_slots: int) -> d
     return rep
 
 
+def _bench_families(archs, n_requests: int, max_new: int, n_slots: int,
+                    reduced: bool = True) -> dict:
+    """State-pool A/B over the non-attention families (``--family``).
+
+    Per arch, the same fixed workload runs through three engines:
+
+    * the ``dense_slots`` oracle (per-slot dense caches) — reference tokens
+      and oracle throughput,
+    * the state pool with ``kv_dtype="dense"`` — planes hold bit-exact
+      values, so its tokens must equal the oracle's (``token_parity``),
+    * the state pool with ``kv_dtype="mxfp4"`` — the deployable config:
+      pooled throughput plus the per-decode-step state-byte traffic of the
+      packed planes vs the oracle's dense per-slot caches
+      (``state_bytes_ratio``, the FP4 bytes win for recurrent state).
+
+    Keys are arch slugs (``falcon_mamba_7b``); the dict fills the schema-v5
+    nullable ``families`` block.
+    """
+    from repro.launch.serve_engine import make_extra, run_workload
+    from repro.serve import Engine, EngineConfig
+
+    out: dict = {}
+    for arch in archs:
+        cfg, model, params = _build(arch, reduced)
+        extra = make_extra(cfg, jax.random.PRNGKey(2))
+        workload = _workload(cfg, n_requests, max_new, seed=5)
+
+        def run_one(kv, backend):
+            eng = Engine(model, params, EngineConfig(
+                n_slots=n_slots, max_len=64, page_size=8, kv_dtype=kv,
+                prefill_chunk=8, decode_backend=backend, debug_cache=True))
+            eng.submit(workload[0][1], 2, extra=extra, arrival_time=0.0)
+            eng.drain()
+            eng.completed.clear()
+            eng.telemetry.reset(eng)
+            t0 = time.perf_counter()
+            done, _ = run_workload(eng, workload, extra=extra, verbose=False)
+            wall = time.perf_counter() - t0
+            toks = sum(len(r.tokens) for r in done)
+            return eng, {r.rid: list(r.tokens) for r in done}, toks / wall
+
+        oracle, o_out, o_rate = run_one("dense", "dense_slots")
+        _, p_out, _ = run_one("dense", "statepool")
+        pooled, _, p_rate = run_one("mxfp4", "statepool")
+        pooled.cache.check_invariants()
+        step_pool = pooled.cache.state_bytes_per_decode_step(64)
+        step_dense = pooled.cache.dense_state_bytes_per_decode_step(64)
+        out[arch.replace("-", "_").replace(".", "_")] = {
+            "family": cfg.family,
+            "token_parity": float(p_out == o_out),
+            "pool_tok_per_s": round(p_rate, 2),
+            "oracle_tok_per_s": round(o_rate, 2),
+            "state_bytes_per_step_pool": step_pool,
+            "state_bytes_per_step_dense": step_dense,
+            "state_bytes_ratio": round(step_dense / step_pool, 2),
+            "cache_bytes_pool": pooled.cache_bytes(),
+            "cache_bytes_dense": oracle.cache_bytes(),
+        }
+    return out
+
+
 def _bench_sharded(model, cfg, params, n_requests: int, n_slots: int,
                    tp: int, dp: int) -> dict | None:
     """Multi-device A/B: single-device vs TP-sharded vs DP-replicated.
@@ -340,7 +407,8 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
           max_new: int = 8, n_slots: int = 4, verify_parity: bool = True,
           spec_k: int = 3, spec_proposer: str = "self",
           metrics_out: str | None = None, shared_prefix: bool = True,
-          tp: int = 1, dp: int = 1, profile_out: str | None = None) -> dict:
+          tp: int = 1, dp: int = 1, profile_out: str | None = None,
+          family_archs: list[str] | None = None) -> dict:
     from repro.launch.serve_engine import run_workload
     from repro.serve import Engine, EngineConfig, SpecConfig
     from repro.serve.spec import aggregate_stats
@@ -514,6 +582,11 @@ def bench(arch: str = "qwen3-1.7b", reduced: bool = True, n_requests: int = 8,
     report["sharding"] = _bench_sharded(
         model, cfg, params, n_requests, n_slots, tp, dp)
 
+    # -- state-pool family A/B: pooled serving vs the dense-slot oracle ------
+    report["families"] = (
+        _bench_families(family_archs, n_requests, max_new, n_slots, reduced)
+        if family_archs else None)
+
     report["cache_ratio"] = round(
         report["dense"]["cache_bytes"] / report["mxfp4"]["cache_bytes"], 2)
     db = report["decode_backends"]
@@ -623,6 +696,9 @@ def make_bench_baseline(rep: dict) -> dict:
         # per-phase cost accounting of the primary run (profiling.py) —
         # already shaped like the schema's nullable "profile" block
         "profile": rep.get("profile"),
+        # state-pool family A/B (--family); already shaped like the schema's
+        # nullable "families" map
+        "families": rep.get("families"),
     }
 
 
@@ -694,6 +770,14 @@ def run():
             ("serve_prefix_parity", 0.0, str(px["parity_warm_vs_cold"])),
             ("serve_prefix_no_leaks", 0.0, str(px["no_leaks"])),
         ]
+    if rep.get("families"):
+        for slug, fb in rep["families"].items():
+            rows += [
+                (f"serve_family_{slug}_parity", 0.0,
+                 str(fb["token_parity"] == 1.0)),
+                (f"serve_family_{slug}_state_bytes_ratio", 0.0,
+                 f"{fb['state_bytes_ratio']}x"),
+            ]
     if rep.get("sharding"):
         sh = rep["sharding"]
         if sh["tp_run"]:
@@ -748,6 +832,13 @@ def main():
                     help="data-parallel engine-replica count for the "
                          "sharding A/B (independent replicas on disjoint "
                          "device groups)")
+    ap.add_argument("--family", action="append", dest="family_archs",
+                    default=None, metavar="ARCH",
+                    help="repeatable: run the state-pool A/B for this "
+                         "non-attention arch (pooled engine vs dense-slot "
+                         "oracle: token parity, tok/s, state bytes/step); "
+                         "fills the schema-v5 'families' block (smoke "
+                         "default: falcon-mamba-7b + whisper-tiny)")
     ap.add_argument("--metrics-out", default=None,
                     help="stream the primary run's registry snapshots as "
                          "JSON-lines to this path (smoke default: "
@@ -764,6 +855,8 @@ def main():
     if args.smoke:
         args.reduced, args.requests, args.max_new, args.slots = True, 4, 4, 2
         args.shared_prefix = True
+        if args.family_archs is None:
+            args.family_archs = ["falcon-mamba-7b", "whisper-tiny"]
         out_dir = REPO_ROOT / "benchmarks" / "out"
         out_dir.mkdir(parents=True, exist_ok=True)
         if args.metrics_out is None:
@@ -774,7 +867,8 @@ def main():
                 args.slots, verify_parity=not args.no_parity,
                 spec_k=args.spec_k, spec_proposer=args.spec_proposer,
                 metrics_out=args.metrics_out, shared_prefix=args.shared_prefix,
-                tp=args.tp, dp=args.dp, profile_out=args.profile_out)
+                tp=args.tp, dp=args.dp, profile_out=args.profile_out,
+                family_archs=args.family_archs)
     print(json.dumps(rep, indent=2))
     if (args.tp > 1 or args.dp > 1) and rep.get("sharding") is None:
         print(f"sharding section skipped: {args.tp * args.dp} devices needed, "
@@ -863,6 +957,19 @@ def main():
                     "PARITY FAILURE: DP-replicated engine != single-device engine"
                 assert sh["dp_run"]["speedup_vs_one_replica"] >= 1.5, \
                     "DP aggregate decode throughput below 1.5x one replica"
+        # state-pool family A/B: pooled serving must be token-exact vs the
+        # dense-slot oracle on every benchmarked family (dense planes), and
+        # the packed pool must cut per-decode-step state traffic >= 4x on at
+        # least the pure-SSM family (f32 recurrent state packs to 4.25-bit)
+        fams = rep.get("families")
+        if fams is not None:
+            for slug, fb in fams.items():
+                assert fb["token_parity"] == 1.0, \
+                    f"PARITY FAILURE: state-pool {slug} != dense-slot oracle"
+                assert fb["state_bytes_ratio"] > 1.0, slug
+            if "falcon_mamba_7b" in fams:
+                assert fams["falcon_mamba_7b"]["state_bytes_ratio"] >= 4.0, \
+                    "SSM state bytes/step reduction below 4x vs dense slots"
         # non-spec decode emits exactly one token per batched call
         assert rep["mxfp4"]["tokens_per_decode_call"] == 1.0
         # spec A/B only exists for paged (dense/moe) families

@@ -220,6 +220,34 @@ def kv_dequantize(pq: PackedQuant, fmt: Format = F.MXFP4,
     return F.from_blocks(vb).astype(dtype)
 
 
+def state_quantize(x: jnp.ndarray, fmt: Format = F.MXFP4,
+                   scale_mode: str = "nearest") -> PackedQuant:
+    """Quantize-on-write for FLAT per-slot state (SSM recurrent/conv rings).
+
+    Same packed payload as :func:`kv_quantize`, but for state whose last
+    axis is an arbitrary flattened feature count: the axis is zero-padded up
+    to the next multiple of ``fmt.block`` first (padding lanes land in their
+    own trailing blocks whenever the true extent is block-aligned, and in
+    the worst case only dilute the final block's AbsMax downward — they
+    never clip real values).  Callers remember the true extent and slice it
+    back in :func:`state_dequantize`.
+    """
+    e = x.shape[-1]
+    block = fmt.block if fmt.block > 0 else e
+    pad = (-e) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return kv_quantize(x, fmt, scale_mode)
+
+
+def state_dequantize(pq: PackedQuant, n: int, fmt: Format = F.MXFP4,
+                     dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`state_quantize`: dequantize the padded payload and
+    slice the last axis back to the true extent ``n``."""
+    vals = kv_dequantize(pq, fmt, dtype)
+    return vals[..., :n]
+
+
 # ---------------------------------------------------------------------------
 # LSQ (learned step size; used by the method-comparison harness)
 # ---------------------------------------------------------------------------

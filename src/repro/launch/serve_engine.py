@@ -96,9 +96,11 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--kv", default="mxfp4", choices=["mxfp4", "dense"])
     ap.add_argument("--decode-backend", default=None,
-                    choices=["paged", "gather"],
+                    choices=["paged", "gather", "statepool", "dense_slots"],
                     help="paged families: fused paged-attention kernel "
-                         "(default) vs gather-dequantize oracle")
+                         "(default) vs gather-dequantize oracle; state "
+                         "families (ssm/hybrid/encdec/vlm): unified packed "
+                         "state pool (default) vs dense-slot oracle")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="paged families: radix prefix cache — admissions "
                          "alias pages of previously-served shared prefixes "
@@ -177,7 +179,8 @@ def main():
     # number the old hand-rolled prints derived from request objects)
     total_tokens = sum(len(r.tokens) for r in done)
     engine.telemetry.finalize()
-    print(f"\n{cfg.name} [{cfg.family}] kv={args.kv if engine.paged else 'dense-slots'}"
+    print(f"\n{cfg.name} [{cfg.family}] "
+          f"kv={'dense-slots' if engine.backend == 'dense_slots' else args.kv}"
           f" decode={engine.decode_backend} slots={args.slots}"
           + (f" spec={args.spec}(k={args.spec_k})" if spec else ""))
     print(f"  {len(done)} requests, {total_tokens} tokens in {elapsed:.2f}s wall "

@@ -265,6 +265,17 @@ def attention(
         # reuse fully-precomputed KV (e.g. cached cross-attention memory)
         k, v = kv_cache
         new_cache = kv_cache
+        # tp: a head-sharded cached cross-KV announces itself by shape, like
+        # the decode/insert branch below — but here k/v are ALREADY local, so
+        # only q's matching GQA group needs slicing before the tiled
+        # all_gather of the outputs
+        tp_sharded = cfg.tp_axis is not None and k.shape[2] != nkv
+        if tp_sharded:
+            local = k.shape[2]
+            group = nq // nkv
+            r = jax.lax.axis_index(cfg.tp_axis)
+            q = jax.lax.dynamic_slice_in_dim(
+                q, r * local * group, local * group, axis=2)
     else:
         src = kv_source if kv_source is not None else x
         k = _split_heads(L.dense(params["wk"], src, L.seed_fold(seed, 2), qc, method), nkv, hd)

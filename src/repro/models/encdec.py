@@ -86,6 +86,43 @@ def encode(params, source_embeds, cfg: ModelConfig, seed, method="quartet"):
     return norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
 
 
+def encode_cross_kv(params, source_embeds, cfg: ModelConfig, seed,
+                    method="quartet"):
+    """Every decoder layer's cross-attention (k, v) computed ONCE from the
+    source: [B, T_src, D] → stacked (k, v) [L, B, T_src, Hkv, hd].
+
+    Bit-identical to what a ``build_cross=True`` forward produces for its
+    cross cache — same encoder seed fold (7), same per-layer seed stride and
+    cross-attention fold (150), same wk/wv projection folds (2/3) inside
+    :func:`~repro.models.attention.attention`, same optional k-norm, no rope
+    (cross keys are unrotated).  The serving engine runs this at ADMISSION
+    and quantize-scatters the result into the pooled cross-KV plane, so
+    every later prefill chunk / decode step reads the pool instead of
+    re-running the encoder."""
+    memory = encode(params, source_embeds, cfg, L.seed_fold(seed, 7), method)
+    hd, nkv = cfg.head_dim_, cfg.num_kv_heads
+    qc = cfg.quartet
+
+    def body(carry, inp):
+        lp, i = inp
+        lp = constrain_layer_params(lp)
+        s = (seed + i.astype(jnp.uint32) * jnp.uint32(LAYER_SEED_STRIDE)).astype(jnp.uint32)
+        sc = L.seed_fold(s, 150)
+        ca = lp["cross_attn"]
+        k = L.dense(ca["wk"], memory, L.seed_fold(sc, 2), qc, method)
+        v = L.dense(ca["wv"], memory, L.seed_fold(sc, 3), qc, method)
+        k = k.reshape(*k.shape[:-1], nkv, hd)
+        v = v.reshape(*v.shape[:-1], nkv, hd)
+        if cfg.qk_norm:
+            k = L.rmsnorm(ca["k_norm"], k, cfg.norm_eps)
+        return carry, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(
+        body, 0, (params["decoder"]["layers"],
+                  jnp.arange(cfg.num_layers, dtype=jnp.uint32)))
+    return ks, vs
+
+
 def encdec_forward(params, tokens, cfg: ModelConfig, seed, *, positions=None,
                    memory=None, source_embeds=None, caches=None, cache_index=None,
                    build_cross=False, method="quartet", extra=None,

@@ -65,6 +65,40 @@ def cross_block(params, x, image_embeds, positions, seed, cfg, cache, method):
     return x + jnp.tanh(params["gate_mlp"]).astype(x.dtype) * h, new_cache
 
 
+def encode_cross_kv(params, image_embeds, cfg: ModelConfig, seed,
+                    method="quartet"):
+    """Every cross super-block's (k, v) over the image tokens, computed ONCE:
+    [B, n_img, D] → stacked (k, v) [n_super, B, n_img, Hkv, hd].
+
+    Bit-identical to what a prefill with ``image_embeds`` writes into its
+    cross cache (``cross_block`` → ``attention(write_kv=True)``): same
+    per-super seed (``seed + sp_idx * 7919`` then fold 100), same wk/wv
+    projection folds (2/3), same optional k-norm, no rope on keys.  The
+    serving engine runs this at admission to populate the pooled cross-KV
+    plane that decode steps read."""
+    hd, nkv = cfg.head_dim_, cfg.num_kv_heads
+    qc = cfg.quartet
+    n_super, _ = _counts(cfg)
+
+    def body(carry, inp):
+        lp, sp_idx = inp
+        s = (seed + sp_idx.astype(jnp.uint32) * jnp.uint32(7919)).astype(jnp.uint32)
+        sa = L.seed_fold(s, 100)
+        ca = lp["attn"]
+        k = L.dense(ca["wk"], image_embeds, L.seed_fold(sa, 2), qc, method)
+        v = L.dense(ca["wv"], image_embeds, L.seed_fold(sa, 3), qc, method)
+        k = k.reshape(*k.shape[:-1], nkv, hd)
+        v = v.reshape(*v.shape[:-1], nkv, hd)
+        if cfg.qk_norm:
+            k = L.rmsnorm(ca["k_norm"], k, cfg.norm_eps)
+        return carry, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(
+        body, 0, (params["cross_layers"],
+                  jnp.arange(n_super, dtype=jnp.uint32)))
+    return ks, vs
+
+
 def init_vlm_lm(key, cfg: ModelConfig):
     dtype = jnp.dtype(cfg.dtype)
     n_super, per = _counts(cfg)

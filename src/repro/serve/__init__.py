@@ -9,6 +9,7 @@ from repro.serve.replica import ReplicatedEngine, make_engine
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec import SpecConfig
+from repro.serve.state_pool import CrossIndex, StatePool
 from repro.serve.telemetry import EngineTelemetry, MetricsRegistry, TelemetryConfig
 
 __all__ = [
@@ -23,6 +24,8 @@ __all__ = [
     "PagedKV",
     "PrefixIndex",
     "DenseSlotCache",
+    "StatePool",
+    "CrossIndex",
     "Request",
     "RequestState",
     "Scheduler",

@@ -24,10 +24,16 @@ column, and the multi-query kernel applies per-row causal bounds — so
 prefill HBM traffic is O(packed KV) and TTFT no longer degrades linearly
 with concurrent arrivals.  The legacy gather-dequantize decode and
 per-slot-gather prefill survive together as a parity oracle behind
-``EngineConfig(decode_backend="gather")``.  Other families (SSM recurrent
-state, hybrid, enc-dec / VLM cross-KV) fall back to :class:`DenseSlotCache`
-but schedule identically — and keep per-slot chunk-then-single-token
-prefill, since an SSM recurrence must never consume a padding token.
+``EngineConfig(decode_backend="gather")``.  The OTHER families (ssm /
+hybrid / encdec / vlm) now pool their per-slot decode state too, behind
+:class:`~repro.serve.state_pool.StatePool`: positional self-KV in paged
+planes, enc-dec/VLM cross-KV encoded ONCE at admission into a static
+refcounted plane (shareable across requests with identical conditioning
+when ``prefix_cache`` is on), and SSM recurrent/conv state in quantized
+double-buffer page rings.  They schedule identically to the paged path but
+keep per-slot chunk-then-single-token prefill, since an SSM recurrence
+must never consume a padding token; the old per-slot dense caches survive
+as the parity oracle behind ``decode_backend="dense_slots"``.
 
 **Speculative decoding** (``EngineConfig(spec=SpecConfig(...))``, paged
 families): each decode tick becomes draft → verify → accept.  A pluggable
@@ -81,12 +87,14 @@ from repro.serve.scheduler import Request, RequestState, Scheduler
 from repro.serve.spec.config import SpecConfig
 from repro.serve.spec.proposers import build_proposer
 from repro.serve.spec.verify import accept_tokens
-from repro.serve.steps import (build_paged_steps, jit_cache_size,
-                               marshal_prefill_batch)
+from repro.serve.state_pool import STATE_FAMILIES, StatePool, cross_key
+from repro.serve.steps import (build_paged_steps, build_state_steps,
+                               jit_cache_size, marshal_prefill_batch)
 from repro.serve.telemetry import EngineTelemetry, TelemetryConfig
 from repro.train.serve import make_chunk_prefill_step, make_decode_step
 
 PAGED_FAMILIES = ("dense", "moe")
+_EMBED_KEY = {"encdec": "source_embeds", "vlm": "image_embeds"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,12 +107,17 @@ class EngineConfig:
     method: str = "quartet"
     eos_id: int | None = None
     keep_logits: bool = False  # record per-step logits on each Request (tests)
-    # batched attention path for paged families (decode, verify AND prefill):
+    # backend selection.  Paged families (decode, verify AND prefill):
     #   None     — follow ModelConfig.attn_backend ("paged" unless overridden)
     #   "paged"  — fused Pallas kernel directly over the packed pool (default);
     #              prefill runs batched across all prefilling slots
     #   "gather" — legacy gather-dequantize-to-dense oracle (parity testing);
     #              prefill stays the per-slot [1, C] + [1, 1] chunk loop
+    # Non-attention families (ssm / hybrid / encdec / vlm):
+    #   None / "statepool" — unified StatePool planes (default): paged
+    #              self-KV, encode-once cross-KV, quantized state rings
+    #   "dense_slots"      — per-slot dense caches; survives as the
+    #              state-pool parity oracle
     decode_backend: str | None = None
     # pool size override (pages incl. the scratch page).  None → one full
     # reservation (ceil(max_len / page_size) pages) per slot + scratch.
@@ -112,14 +125,18 @@ class EngineConfig:
     # beyond a reservation mid-flight, so a pool sized exactly to the
     # reservations it admits can never raise "out of pages".
     n_pages: int | None = None
-    # prefix sharing (paged families only): radix-index prompt token ids at
+    # prefix sharing: on paged families, radix-index prompt token ids at
     # admission, alias every fully-covered cached page into the new slot's
     # table (refcounted; copy-on-write before any divergent write) and
     # prefill only the unshared tail; LRU-evict refcount-one cached prefixes
     # under pool pressure.  Token-exact vs the non-sharing engine — aliasing
     # is safe because MXFP4 quantize-on-write is deterministic, so a shared
     # prefix's packed pages are bit-identical to what a cold prefill would
-    # have produced.
+    # have produced.  On state-pool enc-dec/VLM engines the same flag turns
+    # on CROSS-KV sharing: requests whose conditioning tensors are byte-
+    # identical alias one encoded cross page set (state_pool.CrossIndex) and
+    # skip the encode entirely — warm is token-exact vs cold because both
+    # read the same pooled pages.  ssm/hybrid have no shareable pages.
     prefix_cache: bool = False
     # run PagedCache.check_invariants after EVERY allocator mutate (page
     # conservation, refcount consistency, free-list hygiene) — tests/debug
@@ -144,16 +161,32 @@ class Engine:
                  *, placement: Placement | None = None, ids=None):
         self.model, self.params = model, params
         self.config = cfg = config or EngineConfig()
-        self.paged = model.cfg.family in PAGED_FAMILIES
+        family = model.cfg.family
+        self.paged = family in PAGED_FAMILIES
+        if self.paged:
+            self.backend = "paged"
+        elif cfg.decode_backend in (None, "statepool"):
+            self.backend = "statepool"
+        elif cfg.decode_backend == "dense_slots":
+            self.backend = "dense_slots"
+        else:
+            raise ValueError(
+                f"decode_backend for {family!r} must be 'statepool' (default) "
+                f"or 'dense_slots' (parity oracle), got {cfg.decode_backend!r}")
         self.spec = cfg.spec
         if self.spec is not None and not self.paged:
             raise ValueError(
-                f"speculative decoding needs a paged family (dense/moe), "
-                f"got {model.cfg.family!r}")
+                f"speculative decoding needs a paged family (dense/moe): "
+                f"{family!r} serving has no multi-token verify step — an SSM "
+                f"recurrence scores one token per state transition and the "
+                f"state rings hold no positional history to roll back")
         if cfg.prefix_cache and not self.paged:
-            raise ValueError(
-                f"prefix caching needs a paged family (dense/moe), "
-                f"got {model.cfg.family!r}")
+            if self.backend != "statepool" or family not in ("encdec", "vlm"):
+                raise ValueError(
+                    f"prefix caching needs shareable pages: a paged family "
+                    f"(dense/moe, radix prompt prefixes) or a state-pool "
+                    f"enc-dec/VLM engine (cross-KV sharing); "
+                    f"{family!r} with backend {self.backend!r} has neither")
         if placement is None:
             if cfg.sharding is not None and cfg.sharding.dp > 1:
                 raise ValueError(
@@ -161,9 +194,12 @@ class Engine:
                     "serve.replica.make_engine / ReplicatedEngine")
             placement = Placement(cfg.sharding.tp if cfg.sharding else 1)
         if placement.tp > 1 and not self.paged:
-            raise ValueError(
-                f"tensor-parallel serving needs a paged family (dense/moe), "
-                f"got {model.cfg.family!r}")
+            if self.backend != "statepool" or family not in ("encdec", "vlm"):
+                raise ValueError(
+                    f"tensor-parallel serving shards pooled KV on the head "
+                    f"axis: paged families and state-pool enc-dec/VLM only; "
+                    f"{family!r} with backend {self.backend!r} keeps "
+                    f"recurrent-state rings, which have no head axis to shard")
         self.placement = placement
         self.telemetry = EngineTelemetry(cfg.telemetry)
         self.sched = Scheduler(cfg.n_slots, cfg.max_len, cfg.prefill_chunk,
@@ -210,6 +246,26 @@ class Engine:
             self._prefill_chunk = self._steps.prefill_chunk
             self._verify_all = self._steps.verify_all
             self._prefill_all = self._steps.prefill_all  # None on gather
+            self._encode_cross = None
+        elif self.backend == "statepool":
+            self.cache = StatePool(
+                model, n_slots=cfg.n_slots, max_len=cfg.max_len,
+                page_size=cfg.page_size, kv_dtype=cfg.kv_dtype,
+                debug=cfg.debug_cache)
+            if placement.tp > 1:
+                # both paged planes shard on the KV-head axis (same mesh
+                # contract as the dense/moe pool); params replicate
+                self.cache.kv.pool = placement.shard_pool(self.cache.kv.pool)
+                self.cache.cross.pool = placement.shard_pool(self.cache.cross.pool)
+                self.params = placement.replicate(self.params)
+            self.decode_backend = "statepool"
+            self._steps = build_state_steps(
+                model, method=cfg.method, pool=self.cache,
+                placement=placement if placement.tp > 1 else None)
+            self._decode_all = self._steps.decode_all
+            self._prefill_chunk = self._steps.prefill_chunk
+            self._encode_cross = self._steps.encode_cross
+            self._prefill_all = None  # per-slot chunks: no padding into rings
         else:
             self.cache = P.DenseSlotCache(model, n_slots=cfg.n_slots,
                                           max_len=cfg.max_len)
@@ -231,10 +287,15 @@ class Engine:
             self._decode_all = jax.jit(decode_all)
             self._prefill_chunk = jax.jit(prefill_chunk)
             self._prefill_all = None  # dense slots: SSM state must never see padding
+            self._encode_cross = None
 
         self.prefix = (PrefixIndex(cfg.page_size)
                        if (self.paged and cfg.prefix_cache) else None)
+        # cross-KV sharing: the state-pool analogue of the prefix cache
+        self.cross_share = (self.backend == "statepool" and cfg.prefix_cache
+                            and self.cache.cross is not None)
         self._admit_plan: dict[int, list[int]] = {}  # rid -> matched page ids
+        self._cross_plan: dict[int, tuple] = {}  # rid -> (content key, pages)
         self.proposer = (build_proposer(self, self.spec)
                          if self.spec is not None else None)
         self.telemetry.attach(self)
@@ -245,6 +306,13 @@ class Engine:
                arrival_time: float | None = None,
                sampling: SamplingParams | None = None) -> Request:
         now = time.monotonic() if arrival_time is None else arrival_time
+        if self.backend == "statepool" and self.cache.cross is not None:
+            key = _EMBED_KEY[self.model.cfg.family]
+            if extra is None or extra.get(key) is None:
+                raise ValueError(
+                    f"state-pool {self.model.cfg.family!r} serving encodes "
+                    f"cross-KV once at admission: submit() needs "
+                    f"extra[{key!r}]")
         req = self.sched.submit(prompt, max_new, extra=extra, arrival_time=now,
                                 sampling=sampling)
         self.telemetry.registry.counter("requests_submitted").inc()
@@ -261,8 +329,16 @@ class Engine:
 
         # -- admit ---------------------------------------------------------
         def can_admit(req: Request) -> bool:
-            if not self.paged:
+            if self.backend == "dense_slots":
                 return True
+            if self.backend == "statepool":
+                key = cross_key(req.extra) if self.cross_share else None
+                match = self.cache.cross_match(key, now)
+                ok = self.cache.can_admit(req.prompt_len + req.max_new,
+                                          cross_shared=bool(match))
+                if ok and self.cross_share:
+                    self._cross_plan[req.rid] = (key, match)
+                return ok
             if self.prefix is None:
                 return self.cache.can_alloc(req.prompt_len + req.max_new)
             match = self.prefix.match(req.prompt, now)
@@ -334,7 +410,7 @@ class Engine:
         """Compiled-variant count per jitted step — the one-compile-per-shape
         contract made observable (exported as ``jit_compiled_*`` gauges and
         pinned by the telemetry no-recompile test)."""
-        if self.paged:
+        if self.backend in ("paged", "statepool"):
             return self._steps.compile_counts()
         return {"decode_all": jit_cache_size(self._decode_all),
                 "prefill_chunk": jit_cache_size(self._prefill_chunk),
@@ -366,10 +442,34 @@ class Engine:
         ``Scheduler.admit`` — before the next head's ``can_admit`` — so page
         allocation, prefix aliasing, eviction, and the eager full-hit COW are
         transactional against the pool the next admission is judged on."""
-        if not self.paged:
+        if self.backend == "dense_slots":
             self.cache.reset_slot(req.slot)
             return
         total = req.prompt_len + req.max_new
+        if self.backend == "statepool":
+            reg = self.telemetry.registry
+            key, match = self._cross_plan.pop(req.rid, (None, []))
+            self.cache.alloc(req.slot, total, cross_shared=match)
+            if self.cache.cross is None:
+                return
+            if self.cross_share:
+                reg.counter("prefix_lookups").inc()
+            if match:
+                # warm: the slot's cross row aliases the cached page set —
+                # no encode, and decode reads bit-identical pages to cold
+                reg.counter("prefix_hit_requests").inc()
+                reg.counter("prefix_shared_tokens").inc(self.cache.cross_tokens)
+                return
+            embeds = req.extra[_EMBED_KEY[self.model.cfg.family]]
+            cross_row = jnp.asarray(self.cache.cross.tables[req.slot])
+            self.cache.cross.pool = self._encode_cross(
+                self.params, jnp.asarray(embeds), cross_row,
+                self.cache.cross.pool)
+            reg.counter("cross_encode_calls").inc()
+            if self.cross_share and key is not None:
+                reg.counter("prefix_inserted_pages").inc(
+                    self.cache.cross_publish(key, req.slot, now))
+            return
         if self.prefix is None:
             self.cache.alloc(req.slot, total)
             return
@@ -430,6 +530,22 @@ class Engine:
             table_row = jnp.asarray(self.cache.tables[req.slot])
             logits, self.cache.pool = self._prefill_chunk(
                 self.params, tokens, start, table_row, self.cache.pool, req.extra)
+        elif self.backend == "statepool":
+            sp = self.cache
+            kv_row = (jnp.asarray(sp.kv.tables[req.slot])
+                      if sp.kv is not None else None)
+            cross_row = (jnp.asarray(sp.cross.tables[req.slot])
+                         if sp.cross is not None else None)
+            read = np.array([sp.ring_read[req.slot]], np.int32)
+            write = np.array([sp.ring_write_id(req.slot)], np.int32)
+            logits, state = self._prefill_chunk(
+                self.params, tokens, start, sp.pools(), kv_row, cross_row,
+                jnp.asarray(read), jnp.asarray(write), req.extra)
+            sp.set_pools(state)
+            if sp.rings:
+                one = np.zeros((self.config.n_slots,), bool)
+                one[req.slot] = True
+                sp.ring_advance(one)
         else:
             logits, self.cache.caches = self._prefill_chunk(
                 self.params, tokens, start, jnp.int32(req.slot),
@@ -525,6 +641,17 @@ class Engine:
             logits, self.cache.pool = self._decode_all(
                 *args, self.cache.pool, jnp.asarray(self.cache.tables),
                 jnp.asarray(mask))
+        elif self.backend == "statepool":
+            sp = self.cache
+            ring_read, ring_write = sp.ring_ids(mask)
+            logits, state = self._decode_all(
+                *args, sp.pools(),
+                jnp.asarray(sp.kv.tables) if sp.kv is not None else None,
+                jnp.asarray(sp.cross.tables) if sp.cross is not None else None,
+                jnp.asarray(ring_read), jnp.asarray(ring_write),
+                jnp.asarray(mask))
+            sp.set_pools(state)
+            sp.ring_advance(mask)
         else:
             logits, self.cache.caches = self._decode_all(
                 *args, self.cache.caches, jnp.asarray(mask))
@@ -655,6 +782,11 @@ class Engine:
                     chain = np.concatenate(
                         [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
                     self._prefix_insert(req, chain, now)
+                self.cache.free(req.slot)
+            elif self.backend == "statepool":
+                # frees KV reservation + cross mapping + deactivates the
+                # ring; CrossIndex pins keep a published cross page set
+                # alive past this release
                 self.cache.free(req.slot)
             if self.proposer is not None:
                 self.proposer.on_retire(req)

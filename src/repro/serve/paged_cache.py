@@ -153,16 +153,33 @@ class PagedCache:
     tables are passed into jitted functions as ordinary int32 operands.
     """
 
-    def __init__(self, model: Model, *, n_slots: int, pages_per_slot: int,
+    def __init__(self, model: Model | None, *, n_slots: int, pages_per_slot: int,
                  page_size: int, n_pages: int | None = None,
-                 kv_dtype: str = "mxfp4", debug: bool = False):
-        cfg = model.cfg
-        if cfg.family not in ("dense", "moe"):
-            raise ValueError(f"PagedCache supports attention-KV families, got {cfg.family!r}")
+                 kv_dtype: str = "mxfp4", debug: bool = False,
+                 geometry: tuple[int, int, int] | None = None,
+                 dtype=None):
+        """``geometry=(layers, kv_heads, head_dim)`` (with ``dtype``) sizes the
+        pool explicitly instead of via ``model.cache_spec`` — how
+        :class:`~repro.serve.state_pool.StatePool` carves attention-KV and
+        cross-KV planes out of families whose cache tree is NOT a plain
+        stacked (k, v) pair (enc-dec, VLM, hybrid).  The family gate applies
+        only to the model-derived path: an explicit geometry is, by
+        construction, a positional-KV plane."""
+        if geometry is None:
+            cfg = model.cfg
+            if cfg.family not in ("dense", "moe"):
+                raise ValueError(
+                    f"PagedCache supports attention-KV families, got {cfg.family!r} "
+                    f"(non-attention families carve planes via explicit geometry=)")
+            spec_k, _ = model.cache_spec(1, page_size)  # [L, 1, ps, Hkv, hd]
+            L, _, _, H, hd = spec_k.shape
+            dtype = cfg.dtype
+        else:
+            L, H, hd = geometry
+            if dtype is None:
+                raise ValueError("explicit geometry= needs an explicit dtype=")
         if kv_dtype not in ("mxfp4", "dense"):
             raise ValueError(f"kv_dtype must be 'mxfp4' or 'dense', got {kv_dtype!r}")
-        spec_k, _ = model.cache_spec(1, page_size)  # [L, 1, ps, Hkv, hd]
-        L, _, _, H, hd = spec_k.shape
         if hd % 2 != 0:
             raise ValueError(f"head dim {hd} must be even for nibble packing")
         # page 0 is the reserved scratch page
@@ -171,7 +188,7 @@ class PagedCache:
         self.pages_per_slot, self.n_pages = pages_per_slot, n_pages
         self.kv_dtype = kv_dtype
         self.layers, self.kv_heads, self.head_dim = L, H, hd
-        self._dtype = jnp.dtype(cfg.dtype)
+        self._dtype = jnp.dtype(dtype)
         nb = hd // _quant_fmt(hd).block
         if kv_dtype == "dense":
             shape = (L, n_pages, page_size, H, hd)

@@ -1,0 +1,546 @@
+"""One packed pool for EVERY family's per-slot decode state.
+
+:class:`StatePool` decomposes a family's cache tree into pooled *planes*,
+each quantize-on-write MXFP4 (or dense, for parity testing):
+
+* **attn-KV plane** — positional self-attention KV ([L, B, T, Hkv, hd]
+  subtrees: ``dense``-shaped stacks in enc-dec/VLM ``"self"`` and the hybrid
+  ``"attn"`` super-block caches) lives in a :class:`~repro.serve.paged_cache.
+  PagedCache` built with an explicit geometry — same pages, free list,
+  refcounts, and COW machinery as the dense/MoE engine pool.
+* **cross-KV plane** — enc-dec / VLM cross-attention KV is *static after
+  encode*: a second ``PagedCache`` holds it, written exactly once per source
+  (at admission, via ``models.{encdec,vlm}.encode_cross_kv``) and only ever
+  read afterwards.  Because pages are refcounted, two requests carrying the
+  same audio/image source can ALIAS one set of cross pages — the
+  :class:`CrossIndex` is the radix-prefix-cache analogue for conditioning
+  tensors (exact-match on the embedding bytes; eviction drops the pin, the
+  pages free once no slot maps them).
+* **state rings** — SSM recurrent state and conv buffers have no positional
+  axis to page over; each flattened leaf gets a :class:`RingPlane`: one page
+  holds a slot's ENTIRE leaf state, and each slot owns a depth-2 ring of
+  pages it alternates between (read page ``r``, write page ``w``, swap after
+  the step).  Page 0 is the shared zero-sentinel/scratch: a fresh slot READS
+  id 0 (gather substitutes exact zeros — the oracle's ``reset_slot``), and
+  masked lanes WRITE to id 0 (never observable).  The double-buffer is what
+  makes one batched jitted step safe: a lane's functional update lands in
+  its write page while every other lane's read page is untouched, without
+  any merge-masked dense update.
+
+Quantization note: packed state is NOT idempotent under re-quantization
+(``quantize(dequantize(x)) != x`` bitwise for values between grid points),
+which is exactly why masked lanes redirect writes to the sentinel instead of
+writing back what they read.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import quantizers as Q
+from repro.models.registry import Model
+from repro.serve.paged_cache import PagedCache
+
+STATE_FAMILIES = ("ssm", "hybrid", "encdec", "vlm")
+RING_DEPTH = 2  # read page + write page per slot
+_STATE_FMT = F.MXFP4  # block-32 E2M1 + E8M0, same payload as the KV pool
+
+
+# ---------------------------------------------------------------------------
+# RingPlane — one flattened recurrent-state leaf
+# ---------------------------------------------------------------------------
+
+
+class RingPlane:
+    """A pool of whole-state pages for ONE cache-tree leaf ([L, B, *rest]).
+
+    Page assignment is static — slot ``s`` owns pages ``1 + s*RING_DEPTH ..
+    1 + s*RING_DEPTH + RING_DEPTH - 1`` — so there is no allocator; the host
+    ring cursor (owned by :class:`StatePool`, shared across planes) decides
+    which page is read and which is written each step.  ``gather``/
+    ``scatter`` are pure jit-traceable functions of the pool dict.
+    """
+
+    def __init__(self, name: str, leaf_shape: tuple[int, ...], leaf_dtype,
+                 n_slots: int, kv_dtype: str):
+        # leaf_shape is the PER-SLOT state shape: [L, *rest] (batch removed)
+        self.name = name
+        self.leaf_shape = tuple(int(d) for d in leaf_shape)
+        self.dtype = jnp.dtype(leaf_dtype)
+        self.kv_dtype = kv_dtype
+        self.elems = int(np.prod(self.leaf_shape))
+        block = _STATE_FMT.block
+        self.padded = -(-self.elems // block) * block
+        self.n_slots = n_slots
+        self.n_pages = 1 + n_slots * RING_DEPTH
+        if kv_dtype == "dense":
+            self.pool = {"raw": jnp.zeros((self.n_pages, self.padded), self.dtype)}
+        else:
+            self.pool = {
+                "codes": jnp.zeros((self.n_pages, self.padded // 2), jnp.uint8),
+                "scales": jnp.zeros((self.n_pages, self.padded // block), jnp.uint8),
+            }
+
+    # -- pure device ops ----------------------------------------------------
+
+    def gather(self, pool: dict, ids: jnp.ndarray) -> jnp.ndarray:
+        """ids [B] int32 page ids → leaf values [L, B, *rest]; id 0 reads
+        exact zeros (fresh state), whatever the sentinel page holds."""
+        B = ids.shape[0]
+        if "raw" in pool:
+            flat = pool["raw"][ids].astype(self.dtype)  # [B, padded]
+        else:
+            pq = Q.PackedQuant(pool["codes"][ids], pool["scales"][ids])
+            flat = Q.kv_dequantize(pq, _STATE_FMT, self.dtype)
+        flat = jnp.where(ids[:, None] != 0, flat, jnp.zeros_like(flat))
+        leaf = flat[:, :self.elems].reshape(B, *self.leaf_shape)
+        return jnp.moveaxis(leaf, 0, 1)  # [L, B, *rest]
+
+    def scatter(self, pool: dict, ids: jnp.ndarray, leaf: jnp.ndarray) -> dict:
+        """Write each lane's whole new state into its page (quantize-on-write
+        in packed mode).  Masked lanes carry id 0 — their writes collide on
+        the sentinel, whose contents are never read."""
+        B = ids.shape[0]
+        flat = jnp.moveaxis(leaf, 1, 0).reshape(B, self.elems)
+        if "raw" in pool:
+            pad = self.padded - self.elems
+            if pad:
+                flat = jnp.pad(flat, ((0, 0), (0, pad)))
+            return {"raw": pool["raw"].at[ids].set(flat.astype(self.dtype))}
+        pq = Q.state_quantize(flat.astype(jnp.float32), _STATE_FMT)
+        return {"codes": pool["codes"].at[ids].set(pq.codes),
+                "scales": pool["scales"].at[ids].set(pq.scales)}
+
+    # -- accounting ---------------------------------------------------------
+
+    def page_bytes(self) -> int:
+        """Bytes one slot's state occupies in THIS plane's storage."""
+        return sum(int(a.nbytes) for a in self.pool.values()) // self.n_pages
+
+    def dense_bytes(self) -> int:
+        """Bytes the same state occupies in the DenseSlotCache oracle."""
+        return self.elems * self.dtype.itemsize
+
+    def cache_bytes(self) -> int:
+        return sum(int(a.nbytes) for a in self.pool.values())
+
+    def slot_pages(self, slot: int) -> tuple[int, ...]:
+        base = 1 + slot * RING_DEPTH
+        return tuple(range(base, base + RING_DEPTH))
+
+
+# ---------------------------------------------------------------------------
+# CrossIndex — exact-match sharing of encoded cross-KV pages
+# ---------------------------------------------------------------------------
+
+
+def cross_key(extra: Any) -> str | None:
+    """Content key for a request's conditioning tensors (source/image
+    embeddings): two requests with byte-identical embeddings share one
+    encoded cross-KV page set.  None when the request carries none."""
+    if not extra:
+        return None
+    h = hashlib.sha1()
+    found = False
+    for name in sorted(extra):
+        val = extra[name]
+        if val is None:
+            continue
+        arr = np.asarray(jax.device_get(val))
+        h.update(name.encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+        found = True
+    return h.hexdigest() if found else None
+
+
+class CrossIndex:
+    """Pins encoded cross-KV page sets under their source-content key.
+
+    The cross plane's analogue of the radix prefix index: a cached entry
+    holds one external reference per page (``PagedCache.ref_page``), so the
+    pages survive the encoding slot's retirement; a warm admission aliases
+    them via ``alloc(shared=...)``; eviction (LRU, under pool pressure)
+    drops the pins and the pages free once no slot still maps them.
+    """
+
+    def __init__(self):
+        self._entries: dict[str, tuple[tuple[int, ...], float]] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def match(self, key: str | None, stamp: float) -> list[int]:
+        if key is None or key not in self._entries:
+            return []
+        pages, _ = self._entries[key]
+        self._entries[key] = (pages, stamp)  # LRU touch
+        return list(pages)
+
+    def publish(self, cache: PagedCache, key: str | None,
+                pages: np.ndarray, stamp: float) -> int:
+        if key is None or key in self._entries:
+            return 0
+        pages = tuple(int(p) for p in pages if int(p) != 0)
+        for p in pages:
+            cache.ref_page(p)
+        self._entries[key] = (pages, stamp)
+        return len(pages)
+
+    def evictable_pages(self, cache: PagedCache, exclude: set[str] | None = None) -> int:
+        """Pages that would return to the free list if every evictable entry
+        (external pin is the last reference) were dropped."""
+        exclude = exclude or set()
+        return sum(len(pages) for key, (pages, _) in self._entries.items()
+                   if key not in exclude
+                   and all(int(cache.refcounts[p]) == 1 for p in pages))
+
+    def evict(self, cache: PagedCache, n_pages: int,
+              exclude: set[str] | None = None) -> int:
+        """Drop least-recently-used fully-unaliased entries until ``n_pages``
+        pages have been freed (or nothing evictable remains)."""
+        exclude = exclude or set()
+        freed = 0
+        order = sorted(self._entries.items(), key=lambda kv: kv[1][1])
+        for key, (pages, _) in order:
+            if freed >= n_pages or key in exclude:
+                continue
+            if not all(int(cache.refcounts[p]) == 1 for p in pages):
+                continue  # still aliased by a live slot
+            for p in pages:
+                cache.unref_page(p)
+            freed += len(pages)
+            del self._entries[key]
+        return freed
+
+    def cached_pages(self) -> int:
+        return sum(len(pages) for pages, _ in self._entries.values())
+
+
+# ---------------------------------------------------------------------------
+# StatePool — the unified allocator
+# ---------------------------------------------------------------------------
+
+
+class StatePool:
+    """Every per-slot decode byte of one non-paged family, in pooled planes.
+
+    Plane decomposition by family (from ``model.cache_spec``):
+
+    ===========  ==================  ==================  ====================
+    family       attn-KV plane       cross-KV plane      state rings
+    ===========  ==================  ==================  ====================
+    ``ssm``      —                   —                   conv + h
+    ``hybrid``   ``"attn"`` stacks   —                   conv + h (mamba2)
+    ``encdec``   ``"self"``          ``"cross"``         —
+    ``vlm``      ``"self"``          ``"cross"``         —
+    ===========  ==================  ==================  ====================
+
+    The engine talks ONLY to this class (admission/release/occupancy/
+    invariants); the jitted steps get the raw plane pools and control arrays
+    as operands and return updated pools the engine writes back.
+    """
+
+    def __init__(self, model: Model, *, n_slots: int, max_len: int,
+                 page_size: int, kv_dtype: str = "mxfp4", debug: bool = False,
+                 cross_headroom: int = 2):
+        cfg = model.cfg
+        if cfg.family not in STATE_FAMILIES:
+            raise ValueError(
+                f"StatePool covers {STATE_FAMILIES}, got {cfg.family!r} "
+                f"(dense/moe use PagedCache directly)")
+        if kv_dtype not in ("mxfp4", "dense"):
+            raise ValueError(f"kv_dtype must be 'mxfp4' or 'dense', got {kv_dtype!r}")
+        self.family = cfg.family
+        self.n_slots, self.max_len, self.page_size = n_slots, max_len, page_size
+        self.kv_dtype, self.debug = kv_dtype, debug
+        self._dtype = jnp.dtype(cfg.dtype)
+
+        spec = model.cache_spec(1, max_len)  # batch-1 shapes
+
+        # -- attn-KV plane ---------------------------------------------------
+        kv_key = {"hybrid": "attn", "encdec": "self", "vlm": "self"}.get(self.family)
+        self.kv: PagedCache | None = None
+        if kv_key is not None:
+            k_spec = spec[kv_key][0]  # [L_kv, 1, max_len, Hkv, hd]
+            L_kv, _, _, H, hd = k_spec.shape
+            pps = -(-max_len // page_size)
+            self.kv = PagedCache(
+                None, n_slots=n_slots, pages_per_slot=pps, page_size=page_size,
+                kv_dtype=kv_dtype, debug=debug,
+                geometry=(L_kv, H, hd), dtype=k_spec.dtype)
+
+        # -- cross-KV plane --------------------------------------------------
+        self.cross: PagedCache | None = None
+        self.cross_tokens = 0
+        if self.family in ("encdec", "vlm"):
+            c_spec = spec["cross"][0]  # [L_c, 1, T_src, Hkv, hd]
+            L_c, _, T_src, Hc, hdc = c_spec.shape
+            cpp = -(-T_src // page_size)
+            # headroom beyond one set per slot keeps retired-but-cached
+            # sources alive (CrossIndex pins) without wedging admission
+            self.cross = PagedCache(
+                None, n_slots=n_slots, pages_per_slot=cpp, page_size=page_size,
+                n_pages=1 + (n_slots + cross_headroom) * cpp,
+                kv_dtype=kv_dtype, debug=debug,
+                geometry=(L_c, Hc, hdc), dtype=c_spec.dtype)
+            self.cross_tokens = int(T_src)
+        self.cross_index = CrossIndex()
+
+        # -- state rings -----------------------------------------------------
+        ring_sub = {"ssm": spec, "hybrid": spec.get("mamba") if isinstance(spec, dict) else None}.get(self.family)
+        self.rings: tuple[RingPlane, ...] = ()
+        self._ring_treedef = None
+        if ring_sub is not None:
+            leaves, self._ring_treedef = jax.tree.flatten(ring_sub)
+            self.rings = tuple(
+                RingPlane(f"ring{i}", (lf.shape[0], *lf.shape[2:]), lf.dtype,
+                          n_slots, kv_dtype)
+                for i, lf in enumerate(leaves))
+        # host ring cursor, shared by every plane: read page id (0 = fresh/
+        # zero) and which of the slot's RING_DEPTH pages is written next
+        self.ring_read = np.zeros((n_slots,), np.int32)
+        self.ring_cur = np.zeros((n_slots,), np.int32)
+        self.ring_active = np.zeros((n_slots,), bool)
+
+    # -- plane traversal -----------------------------------------------------
+
+    def planes(self):
+        """(kind, plane) pairs for telemetry sweeps."""
+        if self.kv is not None:
+            yield "attn_kv", self.kv
+        if self.cross is not None:
+            yield "cross_kv", self.cross
+        for r in self.rings:
+            yield "state_ring", r
+
+    def pools(self) -> dict:
+        """The jitted steps' device-state operand."""
+        return {"kv": self.kv.pool if self.kv else None,
+                "cross": self.cross.pool if self.cross else None,
+                "rings": tuple(r.pool for r in self.rings)}
+
+    def set_pools(self, state: dict) -> None:
+        if self.kv is not None:
+            self.kv.pool = state["kv"]
+        if self.cross is not None:
+            self.cross.pool = state["cross"]
+        for r, p in zip(self.rings, state["rings"]):
+            r.pool = p
+
+    def unflatten_rings(self, leaves):
+        return jax.tree.unflatten(self._ring_treedef, list(leaves))
+
+    # -- admission / release -------------------------------------------------
+
+    def can_admit(self, n_tokens: int, cross_shared: bool = False) -> bool:
+        ok = True
+        if self.kv is not None:
+            ok &= self.kv.can_alloc(min(n_tokens, self.max_len))
+        if self.cross is not None and not cross_shared:
+            cpp = self.cross.pages_needed(self.cross_tokens)
+            ok &= cpp <= (self.cross.free_pages
+                          + self.cross_index.evictable_pages(self.cross))
+        return ok
+
+    def alloc(self, slot: int, n_tokens: int, cross_shared=()) -> None:
+        """Map one admission: KV reservation pages, one cross page set
+        (aliased from ``cross_shared`` when warm), and a reset ring cursor.
+        Runs inline in the scheduler's transactional ``on_admit``."""
+        if self.kv is not None:
+            self.kv.alloc(slot, min(n_tokens, self.max_len))
+        if self.cross is not None:
+            need = self.cross.pages_needed(self.cross_tokens)
+            shortfall = (need - len(cross_shared)) - self.cross.free_pages
+            if shortfall > 0:
+                self.cross_index.evict(self.cross, shortfall)
+            self.cross.alloc(slot, self.cross_tokens, shared=cross_shared)
+        self.ring_read[slot] = 0  # fresh state reads the zero sentinel
+        self.ring_cur[slot] = 0
+        self.ring_active[slot] = bool(self.rings)
+        self._check()
+
+    def free(self, slot: int) -> None:
+        if self.kv is not None:
+            self.kv.free(slot)
+        if self.cross is not None:
+            self.cross.free(slot)
+        self.ring_read[slot] = 0
+        self.ring_cur[slot] = 0
+        self.ring_active[slot] = False
+        self._check()
+
+    # -- ring cursor ---------------------------------------------------------
+
+    def ring_write_id(self, slot: int) -> int:
+        return 1 + slot * RING_DEPTH + int(self.ring_cur[slot])
+
+    def ring_ids(self, mask: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(read_ids, write_ids) [n_slots] for one batched step: masked-off
+        lanes read the zero sentinel and write the scratch sentinel."""
+        read = np.where(mask, self.ring_read, 0).astype(np.int32)
+        write = np.array(
+            [self.ring_write_id(s) if mask[s] else 0
+             for s in range(self.n_slots)], np.int32)
+        return read, write
+
+    def ring_advance(self, mask: np.ndarray) -> None:
+        """Commit one successful step for the masked slots: the page just
+        written becomes the read page; the other ring page is written next."""
+        if not self.rings:
+            return
+        for s in np.nonzero(mask)[0]:
+            self.ring_read[s] = self.ring_write_id(int(s))
+            self.ring_cur[s] ^= 1
+        self._check()
+
+    # -- cross sharing -------------------------------------------------------
+
+    def cross_match(self, key: str | None, stamp: float) -> list[int]:
+        return self.cross_index.match(key, stamp) if self.cross is not None else []
+
+    def cross_publish(self, key: str | None, slot: int, stamp: float) -> int:
+        if self.cross is None:
+            return 0
+        return self.cross_index.publish(self.cross, key,
+                                        self.cross.tables[slot], stamp)
+
+    # -- invariants ----------------------------------------------------------
+
+    def _check(self) -> None:
+        if self.debug:
+            self.check_invariants()
+
+    def check_invariants(self) -> None:
+        """Every plane's allocator invariants plus the ring-cursor contract:
+        the read page is either the zero sentinel or one of the slot's own
+        ring pages (specifically the one the cursor wrote last), cursors are
+        in range, and inactive slots hold the reset cursor."""
+        if self.kv is not None:
+            self.kv.check_invariants()
+        if self.cross is not None:
+            self.cross.check_invariants()
+        for s in range(self.n_slots):
+            cur, read = int(self.ring_cur[s]), int(self.ring_read[s])
+            if cur not in range(RING_DEPTH):
+                raise AssertionError(f"slot {s} ring cursor {cur} out of range")
+            if not self.ring_active[s]:
+                if read != 0 or cur != 0:
+                    raise AssertionError(
+                        f"inactive slot {s} has ring state read={read} cur={cur}")
+                continue
+            base = 1 + s * RING_DEPTH
+            expect_read = 0 if read == 0 else base + ((cur - 1) % RING_DEPTH)
+            if read not in (0, expect_read):
+                raise AssertionError(
+                    f"slot {s} ring read page {read} is not the sentinel or "
+                    f"its own last-written page {expect_read}")
+
+    # -- accounting / telemetry ----------------------------------------------
+
+    def cache_bytes(self) -> int:
+        return sum(p.cache_bytes() for _, p in self.planes())
+
+    def bits_per_element(self) -> float:
+        """Storage bits per logical state element across every plane."""
+        elems = 0
+        if self.kv is not None:
+            elems += (self.kv.layers * self.kv.n_pages * self.kv.page_size
+                      * self.kv.kv_heads * self.kv.head_dim * 2)
+        if self.cross is not None:
+            elems += (self.cross.layers * self.cross.n_pages * self.cross.page_size
+                      * self.cross.kv_heads * self.cross.head_dim * 2)
+        for r in self.rings:
+            elems += r.padded * r.n_pages
+        return self.cache_bytes() * 8 / elems if elems else 0.0
+
+    def occupancy(self) -> float:
+        """Aggregate live fraction over the paged planes (rings are statically
+        mapped, so they count by active slots)."""
+        live = free_like = 0
+        for kind, p in self.planes():
+            if kind == "state_ring":
+                live += int(self.ring_active.sum()) * RING_DEPTH
+                free_like += p.n_pages - 1
+            else:
+                live += p.live_pages()
+                free_like += p.n_pages - 1
+        return live / free_like if free_like else 0.0
+
+    def plane_stats(self) -> dict[str, dict[str, float]]:
+        """Per-tenant-kind page accounting for the telemetry gauges."""
+        stats: dict[str, dict[str, float]] = {}
+        if self.kv is not None:
+            stats["attn_kv"] = {
+                "pages_total": self.kv.n_pages - 1,
+                "pages_free": self.kv.free_pages,
+                "occupancy": self.kv.occupancy(),
+            }
+        if self.cross is not None:
+            stats["cross_kv"] = {
+                "pages_total": self.cross.n_pages - 1,
+                "pages_free": self.cross.free_pages,
+                "occupancy": self.cross.occupancy(),
+            }
+        if self.rings:
+            active = int(self.ring_active.sum())
+            total = sum(r.n_pages - 1 for r in self.rings)
+            used = active * RING_DEPTH * len(self.rings)
+            stats["state_ring"] = {
+                "pages_total": total,
+                "pages_free": total - used,
+                "occupancy": used / total if total else 0.0,
+            }
+        return stats
+
+    def ring_page_mask(self) -> np.ndarray:
+        """[n_pages] bool over any single ring plane's pages (all planes share
+        the static layout): True where the page holds a slot's CURRENT state
+        — the quant-health sampling weight."""
+        n_pages = 1 + self.n_slots * RING_DEPTH
+        mask = np.zeros((n_pages,), bool)
+        for s in range(self.n_slots):
+            if self.ring_active[s] and int(self.ring_read[s]) != 0:
+                mask[int(self.ring_read[s])] = True
+        return mask
+
+    def state_bytes_per_decode_step(self, n_tokens: int) -> int:
+        """Persistent-state bytes ONE slot's decode step moves through this
+        pool: packed KV pages read plus one token's packed write, the static
+        cross pages read, and one ring page read + one written per plane."""
+        total = 0
+        if self.kv is not None:
+            pb = self.kv.cache_bytes() // self.kv.n_pages
+            pages = self.kv.pages_needed(min(n_tokens, self.max_len))
+            total += pages * pb + pb // self.kv.page_size  # read + 1-token write
+        if self.cross is not None:
+            pb = self.cross.cache_bytes() // self.cross.n_pages
+            total += self.cross.pages_needed(self.cross_tokens) * pb
+        for r in self.rings:
+            total += 2 * r.page_bytes()  # read current + write next
+        return total
+
+    def dense_state_bytes_per_decode_step(self, n_tokens: int) -> int:
+        """The same step's traffic in the DenseSlotCache oracle: the FULL
+        per-slot dense caches are read (dense attention has no length
+        paging), one token's KV is written, and recurrent state is read and
+        rewritten whole."""
+        total = 0
+        if self.kv is not None:
+            kv = self.kv
+            row = 2 * kv.layers * kv.kv_heads * kv.head_dim * self._dtype.itemsize
+            total += row * self.max_len + row  # full read + 1-token write
+        if self.cross is not None:
+            c = self.cross
+            total += (2 * c.layers * self.cross_tokens * c.kv_heads
+                      * c.head_dim * self._dtype.itemsize)
+        for r in self.rings:
+            total += 2 * r.dense_bytes()
+        return total

@@ -48,6 +48,7 @@ import numpy as np
 from repro.models.registry import Model
 from repro.serve import paged_cache as P
 from repro.train.serve import (
+    _cast_params,
     make_chunk_prefill_step,
     make_decode_step,
     make_verify_step,
@@ -274,3 +275,214 @@ def build_paged_steps(model: Model, *, method: str, page_size: int,
     # gather oracle: prefill stays the per-slot [1, C] + [1, 1] chunk loop
     return PagedSteps(jax.jit(decode_all), jax.jit(prefill_chunk),
                       jax.jit(verify_all), None)
+
+
+class StateSteps(NamedTuple):
+    """Jitted steps for :class:`~repro.serve.state_pool.StatePool` serving —
+    the non-attention families' counterpart of :class:`PagedSteps`.  One
+    uniform signature per step regardless of which planes the family has
+    (absent planes ride through as ``None`` operands)."""
+
+    # (params, tokens [B,1], positions [B], state, kv_tables, cross_tables,
+    #  ring_read [B], ring_write [B], mask [B]) -> (logits [B,V], state)
+    decode_all: Callable
+    # (params, tokens [1,C], start, state, kv_row, cross_row, ring_read [1],
+    #  ring_write [1], extra) -> (last-token logits [1,V], state)
+    prefill_chunk: Callable
+    # (params, embeds [1,T,D], cross_row, cross_pool) -> cross_pool;
+    # None for families without a cross plane (ssm / hybrid)
+    encode_cross: Callable | None
+
+    def compile_counts(self) -> dict[str, int]:
+        """Same key set as :meth:`PagedSteps.compile_counts` so the telemetry
+        ``jit_compiled_*`` gauge catalog is backend-independent: state-pool
+        engines have no verify step, and the once-per-admission encode-cross
+        step reports under the otherwise-unused ``prefill_all`` key."""
+        return {"decode_all": jit_cache_size(self.decode_all),
+                "prefill_chunk": jit_cache_size(self.prefill_chunk),
+                "verify_all": 0,
+                "prefill_all": jit_cache_size(self.encode_cross)}
+
+
+def build_state_steps(model: Model, *, method: str, pool,
+                      placement=None) -> StateSteps:
+    """Step builders over a :class:`~repro.serve.state_pool.StatePool`.
+
+    Each step assembles the family's dense cache tree FROM the pool planes
+    (gather-dequantize KV/cross pages, gather state-ring pages), runs the
+    unmodified ``train.serve`` decode/chunk step, and scatters the updated
+    state back: the written KV token(s) quantize into their pages, each
+    lane's whole recurrent state quantizes into its ring WRITE page, and the
+    cross plane is never written outside :func:`encode_cross`.  Gathered
+    views are sliced to their exact logical lengths (``max_len`` self-KV,
+    ``cross_tokens`` cross-KV) before the model sees them — cross attention
+    is non-causal, so an unsliced page-granular tail would be attended.
+
+    Exactness contract: with ``kv_dtype="dense"`` planes hold bit-exact
+    values, so every family is token-exact against the ``DenseSlotCache``
+    oracle; enc-dec prefill runs ``build_cross=False`` (reads the pooled
+    cross-KV written once at admission instead of re-running the encoder per
+    chunk), while VLM prefill passes ``extra`` through so its cross k/v are
+    recomputed fresh exactly like the oracle (``attention`` ropes q iff
+    ``kv_source is None`` — reading the pool during VLM prefill would change
+    the q rotation) and the returned cross cache is discarded.
+
+    ``placement`` (tp > 1, enc-dec/VLM only) wraps every step in
+    ``jax.jit(shard_map(...))`` with both paged planes sharded on the
+    KV-head axis — same mesh contract as :func:`build_paged_steps`; the
+    recurrent-state rings have no head axis and are rejected upstream by the
+    engine."""
+    family = model.cfg.family
+    tp = placement.tp if placement is not None else 1
+    if tp > 1:
+        import dataclasses
+
+        from repro.models.registry import build_model
+
+        model = build_model(dataclasses.replace(
+            model.cfg, tp_axis=type(placement).AXIS, tp_size=tp))
+    decode = make_decode_step(model, method=method)
+    chunk = make_chunk_prefill_step(model, method=method, build_cross=False)
+    compute_dtype = jnp.dtype(model.cfg.dtype)
+    ps = pool.page_size
+    max_len, Ts = pool.max_len, pool.cross_tokens
+    rings = pool.rings
+    has_kv, has_cross = pool.kv is not None, pool.cross is not None
+
+    def _gather_kv(state, tables):
+        k, v = P.gather_pages(state["kv"], tables, compute_dtype)
+        return k[:, :, :max_len], v[:, :, :max_len]
+
+    def _gather_cross(state, tables):
+        k, v = P.gather_pages(state["cross"], tables, compute_dtype)
+        return k[:, :, :Ts], v[:, :, :Ts]
+
+    def _gather_rings(state, read_ids):
+        return pool.unflatten_rings(
+            r.gather(p, read_ids) for r, p in zip(rings, state["rings"]))
+
+    def assemble(state, kv_tables, cross_tables, ring_read):
+        if family == "ssm":
+            return _gather_rings(state, ring_read)
+        if family == "hybrid":
+            return {"attn": _gather_kv(state, kv_tables),
+                    "mamba": _gather_rings(state, ring_read)}
+        return {"self": _gather_kv(state, kv_tables),
+                "cross": _gather_cross(state, cross_tables)}
+
+    def kv_of(new_caches):
+        return new_caches["attn"] if family == "hybrid" else new_caches["self"]
+
+    def rings_of(new_caches):
+        return new_caches if family == "ssm" else new_caches["mamba"]
+
+    def _scatter_rings(state, new_sub, write_ids):
+        pools = tuple(
+            r.scatter(p, write_ids, leaf)
+            for r, p, leaf in zip(rings, state["rings"], jax.tree.leaves(new_sub)))
+        return {**state, "rings": pools}
+
+    def decode_all(params, tokens, positions, state, kv_tables, cross_tables,
+                   ring_read, ring_write, mask):
+        """One decode token for every slot: dense views gathered from the
+        planes, the family's unmodified decode step, then quantize-on-write
+        scatter-back.  Masked lanes read the zero ring sentinel / their stale
+        tables and write to page 0 (KV) and ring page 0 (state) — the host
+        never advances their ring cursor, so their logical state is
+        untouched, the exact analogue of the dense path's ``merge_masked``."""
+        pos_safe = jnp.where(mask, positions, 0)
+        caches = assemble(state, kv_tables, cross_tables, ring_read)
+        # no token_valid: none of the state families has MoE capacity routing
+        # (the ssm block does not even accept it), matching the dense oracle
+        logits, new_caches, _ = decode(params, tokens, pos_safe, caches)
+        if has_kv:
+            k2, v2 = kv_of(new_caches)
+            bidx = jnp.arange(tokens.shape[0])
+            k_new = k2[:, bidx, pos_safe]  # [L_kv, B, Hkv, hd]
+            v_new = v2[:, bidx, pos_safe]
+            page_ids = jnp.where(mask, kv_tables[bidx, pos_safe // ps], 0)
+            state = {**state, "kv": P.scatter_tokens(
+                state["kv"], page_ids, pos_safe % ps, k_new, v_new)}
+        if rings:
+            state = _scatter_rings(state, rings_of(new_caches), ring_write)
+        return logits, state
+
+    def prefill_chunk(params, tokens, start, state, kv_row, cross_row,
+                      ring_read, ring_write, extra=None):
+        """One slot's [1, C] prompt chunk: self-KV for positions
+        start..start+C quantize-scatters into the slot's pages, the whole
+        updated recurrent state lands in the ring write page, and any cross
+        cache the model returned is discarded (the pooled cross plane was
+        written at admission and is read-only afterwards)."""
+        caches = assemble(state,
+                          None if kv_row is None else kv_row[None],
+                          None if cross_row is None else cross_row[None],
+                          ring_read)
+        logits, new_caches, _ = chunk(
+            params, tokens, jnp.full((1,), start, jnp.int32), caches, extra)
+        C = tokens.shape[1]
+        if has_kv:
+            k2, v2 = kv_of(new_caches)
+            k_c = jax.lax.dynamic_slice_in_dim(k2, start, C, axis=2)[:, 0]
+            v_c = jax.lax.dynamic_slice_in_dim(v2, start, C, axis=2)[:, 0]
+            pos = start + jnp.arange(C)
+            state = {**state, "kv": P.scatter_tokens(
+                state["kv"], kv_row[pos // ps], pos % ps, k_c, v_c)}
+        if rings:
+            state = _scatter_rings(state, rings_of(new_caches), ring_write)
+        return logits, state
+
+    encode_cross = None
+    if has_cross:
+        if family == "encdec":
+            from repro.models.encdec import encode_cross_kv as ckv
+        else:
+            from repro.models.vlm import encode_cross_kv as ckv
+        mcfg = model.cfg
+
+        def encode_cross(params, embeds, cross_row, cross_pool):
+            """Write one request's cross-KV into its cross-plane pages, ONCE
+            (admission time): [1, T_src, D] conditioning → stacked per-layer
+            (k, v) → quantize-scatter over the slot's cross page row.  Params
+            are cast exactly as the chunk/decode steps cast them, so a dense
+            plane round-trips bit-identically to what a ``build_cross=True``
+            prefill would have attended over."""
+            cparams = _cast_params(params, compute_dtype)
+            ks, vs = ckv(cparams, embeds, mcfg, jnp.uint32(0), method)
+            if tp > 1:
+                # the plane shard holds Hkv/tp local heads; the projection
+                # above computed all of them — keep this shard's slice
+                local = next(iter(cross_pool.values())).shape[3]
+                if local != ks.shape[3]:
+                    r = jax.lax.axis_index(type(placement).AXIS)
+                    ks = jax.lax.dynamic_slice_in_dim(ks, r * local, local, axis=3)
+                    vs = jax.lax.dynamic_slice_in_dim(vs, r * local, local, axis=3)
+            T = ks.shape[2]
+            pos = jnp.arange(T)
+            return P.scatter_tokens(cross_pool, cross_row[pos // ps], pos % ps,
+                                    ks[:, 0], vs[:, 0])
+
+    if tp > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as PS
+
+        R = PS()
+        sspec = placement.pool_specs(pool.pools())
+        cspec = sspec["cross"]
+
+        def smap(fn, in_specs, out_specs):
+            return jax.jit(shard_map(fn, mesh=placement.mesh,
+                                     in_specs=in_specs, out_specs=out_specs,
+                                     check_rep=False))
+
+        decode_sm = smap(decode_all, (R, R, R, sspec, R, R, R, R, R), (R, sspec))
+        chunk_sm = smap(lambda p, t, s, st, kr, cr, rr, rw, extra:
+                        prefill_chunk(p, t, s, st, kr, cr, rr, rw, extra),
+                        (R, R, R, sspec, R, R, R, R, R), (R, sspec))
+        chunk_fn = lambda p, t, s, st, kr, cr, rr, rw, extra=None: chunk_sm(
+            p, t, s, st, kr, cr, rr, rw, extra)
+        enc_sm = smap(encode_cross, (R, R, R, cspec), cspec)
+        return StateSteps(decode_sm, chunk_fn, enc_sm)
+
+    return StateSteps(jax.jit(decode_all), jax.jit(prefill_chunk),
+                      jax.jit(encode_cross) if encode_cross else None)

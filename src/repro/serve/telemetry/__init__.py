@@ -27,7 +27,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from repro.serve.telemetry.quant_health import sample_pool_health
+from repro.serve.telemetry.quant_health import (sample_pool_health,
+                                                sample_state_health)
 from repro.serve.telemetry.registry import (
     METRICS_SCHEMA,
     BinnedHistogram,
@@ -90,6 +91,8 @@ CATALOG: dict[str, tuple[str, str]] = {
     "prompt_tokens_prefilled": ("counter", "prompt tokens consumed by prefill"),
     "prefill_calls": ("counter", "jitted prefill calls"),
     "decode_calls": ("counter", "jitted batched decode calls"),
+    "cross_encode_calls": ("counter",
+                           "cross-KV encode-at-admission calls (state pool)"),
     "verify_calls": ("counter", "jitted speculative verify calls"),
     "draft_decode_calls": ("counter", "proposer draft decode calls"),
     "draft_prefill_calls": ("counter", "proposer draft-cache sync prefill calls"),
@@ -116,6 +119,17 @@ CATALOG: dict[str, tuple[str, str]] = {
     "pool_occupancy": ("gauge", "mapped / allocatable pages"),
     "pool_occupancy_peak": ("gauge", "highest occupancy seen"),
     "kv_cache_bytes": ("gauge", "persistent KV bytes held by the cache"),
+    # gauges — state-pool per-tenant-kind pressure (0 unless backend is
+    # "statepool"; kinds: attn-KV plane / cross-KV plane / state rings)
+    "pool_pages_total_attn_kv": ("gauge", "state pool: allocatable attn-KV pages"),
+    "pool_pages_free_attn_kv": ("gauge", "state pool: free attn-KV pages"),
+    "pool_occupancy_attn_kv": ("gauge", "state pool: attn-KV plane occupancy"),
+    "pool_pages_total_cross_kv": ("gauge", "state pool: allocatable cross-KV pages"),
+    "pool_pages_free_cross_kv": ("gauge", "state pool: free cross-KV pages"),
+    "pool_occupancy_cross_kv": ("gauge", "state pool: cross-KV plane occupancy"),
+    "pool_pages_total_state_ring": ("gauge", "state pool: ring pages (all planes)"),
+    "pool_pages_free_state_ring": ("gauge", "state pool: inactive ring pages"),
+    "pool_occupancy_state_ring": ("gauge", "state pool: active-slot ring fraction"),
     "spec_acceptance_rate": ("gauge", "cumulative accepted / proposed drafts"),
     "prefix_cached_pages": ("gauge", "pages pinned by the radix prefix index"),
     "prefix_hit_rate": ("gauge", "cumulative hit admissions / lookups"),
@@ -149,6 +163,12 @@ CATALOG: dict[str, tuple[str, str]] = {
     "kv_clip_fraction_v": ("gauge", "E2M1 codes at |6.0| in mapped V pages"),
     "kv_zero_fraction_k": ("gauge", "E2M1 codes at 0 in mapped K pages"),
     "kv_zero_fraction_v": ("gauge", "E2M1 codes at 0 in mapped V pages"),
+    "cross_clip_fraction_k": ("gauge", "E2M1 codes at |6.0| in mapped cross-K pages"),
+    "cross_clip_fraction_v": ("gauge", "E2M1 codes at |6.0| in mapped cross-V pages"),
+    "cross_zero_fraction_k": ("gauge", "E2M1 codes at 0 in mapped cross-K pages"),
+    "cross_zero_fraction_v": ("gauge", "E2M1 codes at 0 in mapped cross-V pages"),
+    "state_clip_fraction": ("gauge", "E2M1 codes at |6.0| in live state-ring pages"),
+    "state_zero_fraction": ("gauge", "E2M1 codes at 0 in live state-ring pages"),
     # histograms — latencies and per-request shape
     "tick_s": ("histogram", "wall time of one engine tick"),
     "prefill_tick_s": ("histogram", "wall time of a tick's prefill section"),
@@ -216,10 +236,12 @@ class EngineTelemetry:
         """Record static run context + seed the pool gauges.  Called by the
         engine at the end of construction and again after :meth:`reset`."""
         cfg = engine.config
+        backend = getattr(engine, "backend", "paged" if engine.paged else "")
         self.registry.meta.update({
             "arch": engine.model.cfg.name,
             "family": engine.model.cfg.family,
-            "kv_dtype": cfg.kv_dtype if engine.paged else "dense_slots",
+            "kv_dtype": (cfg.kv_dtype if backend in ("paged", "statepool")
+                         else "dense_slots"),
             "decode_backend": engine.decode_backend,
             "n_slots": cfg.n_slots,
             "spec_proposer": engine.spec.proposer if engine.spec else None,
@@ -232,6 +254,16 @@ class EngineTelemetry:
             g("pool_pages_total").set(total)
             g("pool_pages_free").set(engine.cache.free_pages)
             g("pool_pages_free_watermark").set(engine.cache.free_pages)
+        elif backend == "statepool":
+            stats = engine.cache.plane_stats()
+            total = sum(s["pages_total"] for s in stats.values())
+            free = sum(s["pages_free"] for s in stats.values())
+            g("pool_pages_total").set(total)
+            g("pool_pages_free").set(free)
+            g("pool_pages_free_watermark").set(free)
+            for kind, s in stats.items():
+                g(f"pool_pages_total_{kind}").set(s["pages_total"])
+                g(f"pool_pages_free_{kind}").set(s["pages_free"])
         # seed compile-count gauges so the profiler's compile-event diffing
         # doesn't re-announce warmup compiles after a post-warmup reset
         for name, count in engine.compile_counts().items():
@@ -283,6 +315,23 @@ class EngineTelemetry:
                 if (lookups := reg.counter("prefix_lookups").value):
                     g("prefix_hit_rate").set(
                         reg.counter("prefix_hit_requests").value / lookups)
+        elif getattr(engine, "backend", "") == "statepool":
+            stats = engine.cache.plane_stats()
+            free = sum(s["pages_free"] for s in stats.values())
+            g("pool_pages_free").set(free)
+            g("pool_pages_free_watermark").set_min(free)
+            occ = engine.cache.occupancy()
+            g("pool_occupancy").set(occ)
+            g("pool_occupancy_peak").set_max(occ)
+            for kind, s in stats.items():
+                g(f"pool_pages_free_{kind}").set(s["pages_free"])
+                g(f"pool_occupancy_{kind}").set(s["occupancy"])
+            if getattr(engine, "cross_share", False):
+                g("prefix_cached_pages").set(
+                    engine.cache.cross_index.cached_pages())
+                if (lookups := reg.counter("prefix_lookups").value):
+                    g("prefix_hit_rate").set(
+                        reg.counter("prefix_hit_requests").value / lookups)
         for name, count in engine.compile_counts().items():
             gauge = g(f"jit_compiled_{name}")
             if self.profiler is not None and count > gauge.value:
@@ -304,7 +353,33 @@ class EngineTelemetry:
 
     def sample_quant_health(self, cache) -> dict | None:
         """Fetch the device-side pool reduction and fold it into the
-        registry (no-op on dense pools / empty tables)."""
+        registry (no-op on dense pools / empty tables).  A ``StatePool``
+        routes per tenant kind: attn-KV and cross-KV planes through the
+        paged reduction, state rings through the ring reduction."""
+        from repro.serve.state_pool import StatePool
+
+        if isinstance(cache, StatePool):
+            out = sample_state_health(cache)
+            if out is None:
+                return None
+            g = self.registry.gauge
+            if "kv" in out:
+                for s in ("k", "v"):
+                    g(f"kv_clip_fraction_{s}").set(float(out["kv"][s]["clip_frac"]))
+                    g(f"kv_zero_fraction_{s}").set(float(out["kv"][s]["zero_frac"]))
+                    self.registry.binned(f"kv_scale_hist_{s}", 256).set_counts(
+                        out["kv"][s]["scale_hist"].tolist())
+            if "cross" in out:
+                for s in ("k", "v"):
+                    g(f"cross_clip_fraction_{s}").set(
+                        float(out["cross"][s]["clip_frac"]))
+                    g(f"cross_zero_fraction_{s}").set(
+                        float(out["cross"][s]["zero_frac"]))
+            if "state" in out:
+                g("state_clip_fraction").set(float(out["state"]["clip_frac"]))
+                g("state_zero_fraction").set(float(out["state"]["zero_frac"]))
+            self.registry.counter("quant_health_samples").inc()
+            return out
         out = sample_pool_health(cache)
         if out is None:
             return None

@@ -130,6 +130,24 @@ def step_example_args(engine) -> dict[str, tuple]:
             out["verify_all"] = (params, tok(engine.spec.k + 1), vec, pool,
                                  tables, mask)
         return out
+    if engine.backend == "statepool":
+        sp = engine.cache
+        state = sp.pools()
+        kv_tables = np.asarray(sp.kv.tables) if sp.kv is not None else None
+        cross_tables = (np.asarray(sp.cross.tables)
+                        if sp.cross is not None else None)
+        ring1 = np.zeros((1,), i32)
+        # extra=None mirrors the dense-slot convention: the lowered cross
+        # path reads the pooled plane (decode semantics) — close enough for
+        # cost accounting, and shape-compatible for every family
+        return {
+            "decode_all": (params, tok(1), vec, state, kv_tables, cross_tables,
+                           vec, vec, mask),
+            "prefill_chunk": (params, np.zeros((1, C), i32), np.int32(0), state,
+                              None if kv_tables is None else kv_tables[0],
+                              None if cross_tables is None else cross_tables[0],
+                              ring1, ring1, None),
+        }
     caches = engine.cache.caches
     return {
         "decode_all": (params, tok(1), vec, caches, mask),

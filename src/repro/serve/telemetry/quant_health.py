@@ -96,3 +96,54 @@ def sample_pool_health(cache) -> dict | None:
         return None
     out = pool_health(cache.pool, jnp.asarray(mask))
     return jax.tree.map(np.asarray, out)
+
+
+@jax.jit
+def ring_health(pool: dict, page_mask: jnp.ndarray) -> dict:
+    """One packed state-ring plane ([P, E/2] codes + [P, E/32] scale codes)
+    + live-page mask → clip/zero fractions.  The block-padding tail of each
+    page quantizes exact zeros, so it rides in the zero fraction as a small
+    constant floor (same pages every sample — trends are unaffected)."""
+    if "codes" not in pool:
+        raise ValueError("ring_health needs a packed (mxfp4) ring plane")
+    w = page_mask.astype(jnp.int32)[:, None]
+    nib = split_nibbles(pool["codes"])  # [P, E] u8
+    mag = (nib & 7).astype(jnp.int32)
+    w_el = jnp.broadcast_to(w, mag.shape)
+    n_elems = jnp.sum(w_el)
+    clip = jnp.sum((mag == E2M1_SAT_IDX).astype(jnp.int32) * w_el)
+    zero = jnp.sum((mag == 0).astype(jnp.int32) * w_el)
+    denom = jnp.maximum(n_elems, 1).astype(jnp.float32)
+    return {"clip_frac": clip.astype(jnp.float32) / denom,
+            "zero_frac": zero.astype(jnp.float32) / denom,
+            "n_elems": n_elems}
+
+
+def sample_state_health(pool) -> dict | None:
+    """Reduce a :class:`~repro.serve.state_pool.StatePool`, per tenant kind:
+    ``"kv"``/``"cross"`` reuse the paged-plane reduction (each is a real
+    :class:`PagedCache`); ``"state"`` aggregates every ring plane's
+    clip/zero fractions over the pages holding each live slot's CURRENT
+    state, element-weighted across planes.  ``None`` when the pool is dense
+    or nothing is live."""
+    if pool.kv_dtype != "mxfp4":
+        return None
+    out = {}
+    if pool.kv is not None and (h := sample_pool_health(pool.kv)) is not None:
+        out["kv"] = h
+    if pool.cross is not None and (h := sample_pool_health(pool.cross)) is not None:
+        out["cross"] = h
+    if pool.rings:
+        mask = pool.ring_page_mask()
+        if mask.any():
+            clip = zero = n = 0
+            for r in pool.rings:
+                h = jax.tree.map(np.asarray, ring_health(r.pool, jnp.asarray(mask)))
+                n_r = int(h["n_elems"])
+                clip += float(h["clip_frac"]) * n_r
+                zero += float(h["zero_frac"]) * n_r
+                n += n_r
+            if n:
+                out["state"] = {"clip_frac": clip / n, "zero_frac": zero / n,
+                                "n_elems": n}
+    return out or None

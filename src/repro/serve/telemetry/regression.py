@@ -82,6 +82,12 @@ RULES: tuple[tuple[str, str, float, str], ...] = (
     # versions; a *rise* in per-call cost is the interesting direction
     ("profile.*flops_per_call", "higher_worse", 0.10, SOFT),
     ("profile.*hbm_bytes_per_call", "higher_worse", 0.10, SOFT),
+    # state-pool family A/B (schema v5): parity vs the dense-slot oracle and
+    # the pooled state-bytes win are deterministic facts — hard; per-family
+    # throughput is wall-clock — soft
+    ("families.*.token_parity", "lower_worse", 0.0, HARD),
+    ("families.*.state_bytes_ratio", "lower_worse", 0.02, HARD),
+    ("families.*tok_per_s", "lower_worse", 0.25, SOFT),
     # everything else (pool occupancy, quant health, utilizations, walls,
     # counters-of-calls) — informational only
     ("*", "any", 0.0, INFO),

@@ -30,7 +30,11 @@ from repro.serve.telemetry.registry import METRICS_SCHEMA
 # from telemetry.profiling: FLOPs / HBM-proxy bytes per jitted call, mean
 # roofline utilization and effective bandwidth over the primary run) — null
 # when no step could be cost-accounted
-BENCH_SCHEMA = "repro.bench_serve/v4"
+# v5: adds the nullable "families" section (state-pool A/B over the
+# non-attention families: per-family token parity vs the dense-slot oracle,
+# pooled vs dense throughput, and per-decode-step state-byte traffic) —
+# null when the benchmark runs without --family
+BENCH_SCHEMA = "repro.bench_serve/v5"
 
 _NUM = numbers.Real
 
@@ -44,13 +48,35 @@ class _Nullable:
         self.spec = spec
 
 
+class _MapOf:
+    """Object with *variable* keys (e.g. one block per benchmarked family),
+    every value conforming to the wrapped spec.  The whole section may be
+    ``null``; an empty object is valid (nothing was benchmarked)."""
+
+    def __init__(self, spec: dict):
+        self.spec = spec
+
+
 def _check(errors: list, doc: dict, path: str, spec: dict) -> None:
     for key, want in spec.items():
         if key not in doc:
             errors.append(f"missing {path}{key}")
             continue
         v = doc[key]
-        if isinstance(want, _Nullable):
+        if isinstance(want, _MapOf):
+            if v is None:
+                continue
+            if not isinstance(v, dict):
+                errors.append(f"{path}{key}: expected object|null, "
+                              f"got {type(v).__name__}")
+                continue
+            for sub, block in v.items():
+                if not isinstance(block, dict):
+                    errors.append(f"{path}{key}.{sub}: expected object, "
+                                  f"got {type(block).__name__}")
+                else:
+                    _check(errors, block, f"{path}{key}.{sub}.", want.spec)
+        elif isinstance(want, _Nullable):
             if v is None:
                 continue
             if not isinstance(v, dict):
@@ -177,6 +203,23 @@ _BENCH_SPEC = {
         }),
         "decode": _Nullable(_PROFILE_PHASE_SPEC),
         "verify": _Nullable(_PROFILE_PHASE_SPEC),
+    }),
+    # state-pool A/B over the non-attention families (--family): one block
+    # per benchmarked arch (key = arch slug), null when the section was not
+    # run.  token_parity is 1.0 when the pooled engine (kv_dtype="dense")
+    # is token-exact vs the DenseSlotCache oracle on the same workload;
+    # state bytes are per-decode-step HBM traffic of the mxfp4 pool vs the
+    # oracle's dense per-slot caches
+    "families": _MapOf({
+        "family": str,
+        "token_parity": _NUM,
+        "pool_tok_per_s": _NUM,
+        "oracle_tok_per_s": _NUM,
+        "state_bytes_per_step_pool": _NUM,
+        "state_bytes_per_step_dense": _NUM,
+        "state_bytes_ratio": _NUM,
+        "cache_bytes_pool": _NUM,
+        "cache_bytes_dense": _NUM,
     }),
 }
 

@@ -31,12 +31,17 @@ def _cast_params(params, compute_dtype):
         if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
 
 
-def make_chunk_prefill_step(model: Model, *, method: str = "quartet") -> Callable:
+def make_chunk_prefill_step(model: Model, *, method: str = "quartet",
+                            build_cross: bool = True) -> Callable:
     """Chunked prefill: process ``tokens [B, C]`` starting at absolute position
     ``start [B]``, writing KV at ``start .. start+C`` — the building block both
     the whole-prompt :func:`make_prefill_step` and the continuous-batching
-    engine's per-slot prefill share.  Cross caches (enc-dec / VLM) are
-    (re)built on every chunk — idempotent, since the source memory is fixed."""
+    engine's per-slot prefill share.  With ``build_cross=True`` (default)
+    cross caches (enc-dec) are (re)built on every chunk — idempotent, since
+    the source memory is fixed; ``build_cross=False`` skips the encoder and
+    attends over an already-populated cross cache instead (the state-pool
+    engine writes cross-KV ONCE at admission, so every chunk reads the pool
+    rather than re-running the encoder)."""
     cfg = model.cfg
     compute_dtype = jnp.dtype(cfg.dtype)
 
@@ -47,7 +52,7 @@ def make_chunk_prefill_step(model: Model, *, method: str = "quartet") -> Callabl
         positions = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
         logits, caches, _ = model.forward(
             cparams, tokens, jnp.uint32(0), positions=positions, caches=caches,
-            cache_index=start, extra=extra, build_cross=True, method=method,
+            cache_index=start, extra=extra, build_cross=build_cross, method=method,
             token_valid=token_valid)
         return logits[:, -1, :], caches, start + C
 
